@@ -1,0 +1,114 @@
+"""Paper ablation figures: 9 (descent vs disorder loss), 10 (lambda sweep),
+11 (Algorithm-1 vs random channel selection), 15 (training convergence)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK_CFG
+
+
+def _run(joint_steps=120, **kw):
+    from repro.train.agile_pipeline import run_full_pipeline
+    return run_full_pipeline(QUICK_CFG, pretrain_steps=60,
+                             joint_steps=joint_steps, batch_size=32, **kw)
+
+
+# -------------------------------------------- Figure 9: ordering losses ----
+def fig9_ordering_loss() -> list[tuple]:
+    """L_disorder (Eq. 1, relaxed) vs the strawman L_descent (full sort).
+    Paper: enforcing the full descending order costs >10% accuracy."""
+    rows = []
+    for ordering in ("disorder", "descent"):
+        _, _, report, _, _ = _run(ordering=ordering)
+        rows.append((f"fig9.accuracy@{ordering}", report["accuracy"],
+                     f"disorder_rate={report['disorder_rate']:.3f}"))
+        rows.append((f"fig9.skewness@{ordering}", report["skewness"], ""))
+    return rows
+
+
+# ------------------------------------------------ Figure 10: lambda --------
+def fig10_lambda_sweep() -> list[tuple]:
+    """lam in {0.1, 0.3, 0.7}: small lam over-weights skewness and hurts
+    accuracy; the paper recommends 0.2-0.4."""
+    rows = []
+    for lam in (0.1, 0.3, 0.7):
+        _, _, report, _, _ = _run(lam=lam)
+        rows.append((f"fig10.accuracy@lam{lam}", report["accuracy"],
+                     f"skew={report['skewness']:.3f}"))
+    return rows
+
+
+# -------------------------------------- Figure 11: channel pre-selection ---
+def fig11_channel_selection() -> list[tuple]:
+    """Algorithm-1 likelihood-based initial channels vs random selection.
+    Paper: random selection causes learning difficulty from the first
+    epochs."""
+    rows = []
+    for random_channels in (False, True):
+        tag = "random" if random_channels else "alg1"
+        _, _, report, history, _ = _run(random_channels=random_channels)
+        early = [h["loss"] for h in history if h["step"] < 40] or [float("nan")]
+        rows.append((f"fig11.accuracy@{tag}", report["accuracy"],
+                     f"skew={report['skewness']:.3f}"))
+        rows.append((f"fig11.early_loss@{tag}", float(np.mean(early)),
+                     "mean loss over first 40 joint steps"))
+    return rows
+
+
+# ------------------------------------------- Figure 15: convergence --------
+def fig15_convergence() -> list[tuple]:
+    """AgileNN's joint training converges at a rate comparable to plain
+    training of the same remote backbone (paper Fig. 15)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.agile import cross_entropy
+    from repro.core.baselines import train_baseline
+    from repro.data.synthetic import ImageDatasetSpec, SyntheticImages
+    from repro.models.cnn import remote_nn_apply, remote_nn_init
+
+    cfg = QUICK_CFG
+    _, _, report, history, data = _run(joint_steps=120)
+    agile_acc = [h["accuracy"] for h in history]
+    steps_to_90 = next((h["step"] for h in history if h["accuracy"] >= 0.9),
+                       -1)
+
+    # plain training of a same-size CNN on raw images
+    key = jax.random.PRNGKey(4)
+    p0 = {"net": remote_nn_init(key, 3, cfg.n_classes, width=cfg.remote_width,
+                                blocks=cfg.remote_blocks)}
+
+    def plain_loss(p, images, labels):
+        logits = remote_nn_apply(p["net"], images)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return cross_entropy(logits, labels), {"accuracy": acc}
+
+    accs = []
+    params = p0
+    from repro.optim.sgd import sgd_init, sgd_update
+    opt = sgd_init(params)
+
+    @jax.jit
+    def step(p, o, images, labels):
+        (loss, m), g = jax.value_and_grad(plain_loss, has_aux=True)(p, images, labels)
+        p, o = sgd_update(p, g, o, lr=0.02)
+        return p, o, m["accuracy"]
+
+    plain_steps_to_90 = -1
+    for i in range(120):
+        images, labels = data.batch(32, seed=70_000 + i)
+        params, opt, acc = step(params, opt, images, labels)
+        if plain_steps_to_90 < 0 and float(acc) >= 0.9:
+            plain_steps_to_90 = i
+    return [("fig15.agilenn.steps_to_90", steps_to_90,
+             "joint training w/ XAI losses"),
+            ("fig15.plain.steps_to_90", plain_steps_to_90,
+             "plain CNN on raw images"),
+            ("fig15.agilenn.final_acc", report["accuracy"], "")]
+
+
+ABLATIONS = {
+    "fig9": fig9_ordering_loss,
+    "fig10": fig10_lambda_sweep,
+    "fig11": fig11_channel_selection,
+    "fig15": fig15_convergence,
+}

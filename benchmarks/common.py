@@ -1,0 +1,81 @@
+"""Shared benchmark fixtures: one trained AgileNN system + trained
+baselines, reused by every per-figure benchmark."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.configs.base import AgileSpec
+
+QUICK_CFG = AgileNNConfig(image_size=16, remote_width=24, remote_blocks=2,
+                          reference_width=32, reference_blocks=3,
+                          agile=AgileSpec(enabled=True, extractor_channels=24,
+                                          k=5, rho=0.8, lam=0.3, ig_steps=4))
+
+
+@lru_cache(maxsize=None)
+def trained_system(xai_method: str = "ig", k: int = 5, rho: float = 0.8,
+                   joint_steps: int = 150, pretrain_steps: int = 60):
+    """Train (cached) and return (cfg, params, ref_params, report, data)."""
+    import dataclasses
+    from repro.train.agile_pipeline import run_full_pipeline
+    cfg = dataclasses.replace(
+        QUICK_CFG, agile=dataclasses.replace(QUICK_CFG.agile, k=k, rho=rho))
+    t0 = time.time()
+    params, ref, report, hist, data = run_full_pipeline(
+        cfg, pretrain_steps=pretrain_steps, joint_steps=joint_steps,
+        batch_size=32, xai_method=xai_method)
+    report["train_wall_s"] = round(time.time() - t0, 1)
+    return cfg, params, ref, report, data
+
+
+@lru_cache(maxsize=None)
+def trained_baselines(steps: int = 150):
+    """DeepCOD + SPINN + MCUNet-proxy trained on the same data."""
+    from repro.core.baselines import (
+        deepcod_init, deepcod_loss, mcunet_apply, mcunet_init, spinn_init,
+        spinn_loss, train_baseline)
+    from repro.core.agile import cross_entropy
+    import jax.numpy as jnp
+    cfg, _, _, _, data = trained_system()
+    key = jax.random.PRNGKey(11)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    deepcod, dc_m = train_baseline(deepcod_loss, deepcod_init(k1, cfg), data,
+                                   steps=steps)
+    spinn, sp_m = train_baseline(spinn_loss, spinn_init(k2, cfg), data,
+                                 steps=steps)
+
+    def mcunet_loss(p, images, labels):
+        logits = mcunet_apply(p, images)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return cross_entropy(logits, labels), {"accuracy": acc}
+
+    mcunet, mc_m = train_baseline(mcunet_loss, mcunet_init(k3, cfg), data,
+                                  steps=steps)
+    return {"deepcod": (deepcod, dc_m), "spinn": (spinn, sp_m),
+            "mcunet": (mcunet, mc_m)}
+
+
+def eval_accuracy(predict_fn, data, *, n_batches: int = 3,
+                  batch_size: int = 128) -> float:
+    accs = []
+    for i in range(n_batches):
+        images, labels = data.batch(batch_size, seed=880_000 + i)
+        preds = np.asarray(predict_fn(images))
+        accs.append(float((preds == labels).mean()))
+    return float(np.mean(accs))
+
+
+def timed_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.time() - t0) / iters * 1e6

@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: us/call of the jnp substrate paths on CPU
+(interpret-mode Pallas is a correctness harness, not a perf path, so the
+timed paths are the jit'd jnp implementations the dry-run lowers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed_us
+from repro.nn.attention import flash_attention
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.ssm import mamba_apply, mamba_init
+from repro.nn.xlstm import mlstm_apply, mlstm_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+def kernel_micro_rows() -> list[tuple]:
+    rows = []
+    B, T, H, D = 1, 512, 4, 64
+    q = jax.random.normal(KEY, (B, T, H, D))
+    k = jax.random.normal(KEY, (B, T, 2, D))
+    v = jax.random.normal(KEY, (B, T, 2, D))
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, q_block=128,
+                                                kv_block=128))
+    us = timed_us(f, q, k, v)
+    flops = 4 * B * T * T * H * D / 2  # causal
+    rows.append(("kernel.flash_attention.us", us,
+                 f"gflops={flops / us / 1e3:.2f}"))
+
+    p = moe_init(KEY, 128, 256, 8)
+    x = jax.random.normal(KEY, (2, 256, 128))
+    f = jax.jit(lambda p, x: moe_apply(p, x, top_k=2)[0])
+    rows.append(("kernel.moe_dispatch.us", timed_us(f, p, x), "8e top-2"))
+
+    p = mamba_init(KEY, 128)
+    x = jax.random.normal(KEY, (1, 512, 128))
+    f = jax.jit(lambda p, x: mamba_apply(p, x, chunk=128))
+    rows.append(("kernel.mamba_scan.us", timed_us(f, p, x), "chunked"))
+
+    p = mlstm_init(KEY, 128, 4)
+    f = jax.jit(lambda p, x: mlstm_apply(p, x, n_heads=4, chunk=64))
+    rows.append(("kernel.mlstm_chunked.us", timed_us(f, p, x), ""))
+    return rows

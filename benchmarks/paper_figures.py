@@ -1,0 +1,236 @@
+"""One benchmark per paper table/figure (§7), run against the trained
+synthetic-data system.  Each function returns a list of CSV rows
+(name, value, derived)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_accuracy, trained_baselines, trained_system
+from repro.core.agile import agile_predict
+from repro.core.baselines import (
+    deepcod_cost,
+    deepcod_forward,
+    deepcod_payload,
+    edge_only_cost,
+    mcunet_apply,
+    mcunet_cost,
+    spinn_cost,
+    spinn_forward,
+)
+from repro.serve.device_model import DeviceModel
+from repro.serve.offload import (
+    energy_per_inference,
+    measure_payload,
+    remote_nn_macs,
+    run_offload_inference,
+)
+
+
+def _device(cfg, **kw):
+    return DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps, **kw)
+
+
+# ------------------------------------------------- Figure 16: latency ------
+def fig16_latency_accuracy() -> list[tuple]:
+    cfg, params, ref, report, data = trained_system()
+    baselines = trained_baselines()
+    images, labels = data.batch(64, seed=990_000)
+    rows = []
+
+    preds, cost = run_offload_inference(cfg, params, images)
+    acc = eval_accuracy(lambda im: jnp.argmax(agile_predict(cfg, params, im)[0], -1), data)
+    rows.append(("fig16.agilenn.latency_ms", cost.end_to_end_s * 1e3, f"acc={acc:.3f}"))
+    rows.append(("fig16.agilenn.local_ms", cost.local_compute_s * 1e3, ""))
+
+    rmacs = remote_nn_macs(cfg, cfg.image_size // 4)
+    dp, _ = baselines["deepcod"]
+    dcost = deepcod_cost(cfg, dp, images, remote_macs=rmacs)
+    dacc = eval_accuracy(lambda im: jnp.argmax(deepcod_forward(dp, im, train=False)[0], -1), data)
+    rows.append(("fig16.deepcod.latency_ms", dcost.end_to_end_s * 1e3, f"acc={dacc:.3f}"))
+
+    sp, _ = baselines["spinn"]
+    scost = spinn_cost(cfg, sp, images, remote_macs=rmacs)
+    sacc = eval_accuracy(lambda im: jnp.argmax(spinn_forward(sp, im, train=False)[1], -1), data)
+    rows.append(("fig16.spinn.latency_ms", scost.end_to_end_s * 1e3, f"acc={sacc:.3f}"))
+
+    mc, _ = baselines["mcunet"]
+    mcost = mcunet_cost(cfg)
+    macc = eval_accuracy(lambda im: jnp.argmax(mcunet_apply(mc, im), -1), data)
+    rows.append(("fig16.mcunet.latency_ms", mcost.end_to_end_s * 1e3, f"acc={macc:.3f}"))
+
+    ecost = edge_only_cost(cfg, np.asarray(images), remote_macs=rmacs)
+    rows.append(("fig16.edge_only.latency_ms", ecost.end_to_end_s * 1e3,
+                 f"acc={report['reference_accuracy']:.3f}"))
+    agile_vs_mcunet = mcost.end_to_end_s / max(cost.end_to_end_s, 1e-9)
+    rows.append(("fig16.speedup_vs_mcunet", agile_vs_mcunet, "paper: up to 6x"))
+    return rows
+
+
+# --------------------------------------------- Table 2: transmission -------
+def tab2_transmission() -> list[tuple]:
+    cfg, params, ref, _, data = trained_system()
+    dp, _ = trained_baselines()["deepcod"]
+    images, _ = data.batch(64, seed=990_001)
+    agile_bytes, _ = measure_payload(cfg, params, images)
+    deepcod_bytes = deepcod_payload(dp, images)
+    reduction = 1.0 - agile_bytes / max(deepcod_bytes, 1)
+    return [("tab2.agilenn.payload_bytes", agile_bytes / 64, ""),
+            ("tab2.deepcod.payload_bytes", deepcod_bytes / 64, ""),
+            ("tab2.reduction_vs_deepcod", reduction,
+             "paper: 15.8%-72.3% across datasets")]
+
+
+# ------------------------------------- Figure 17: compression rates --------
+def fig17_compression_sweep() -> list[tuple]:
+    """Vary quantizer resolution (bits/feature) — higher compression =
+    fewer centers — and measure accuracy (hard-quantized eval path)."""
+    cfg, params, ref, _, data = trained_system()
+    from repro.compress.quantize import quantizer_init
+    rows = []
+    for L in (16, 8, 4, 2):
+        p2 = dict(params)
+        p2["quant"] = quantizer_init(L, -4, 4)
+        acc = eval_accuracy(
+            lambda im: jnp.argmax(agile_predict(cfg, p2, im)[0], -1), data)
+        images, _ = data.batch(64, seed=990_002)
+        payload, _ = measure_payload(cfg, p2, images)
+        rows.append((f"fig17.agilenn.acc@{L}centers", acc,
+                     f"payload={payload / 64:.0f}B"))
+    return rows
+
+
+# ---------------------------------------- Figure 18: alpha reweighting -----
+def fig18_alpha_sweep() -> list[tuple]:
+    cfg, params, ref, _, data = trained_system()
+    rows = []
+    for a in (0.0, 0.15, 0.3, 0.45, 0.6, 0.8, 1.0):
+        acc = eval_accuracy(
+            lambda im: jnp.argmax(
+                agile_predict(cfg, params, im, alpha_override=a)[0], -1), data)
+        rows.append((f"fig18.acc@alpha={a}", acc, ""))
+    return rows
+
+
+# ------------------------------------- Figure 21: skewness settings --------
+def fig21_skewness_grid() -> list[tuple]:
+    """k in {10%, 20%, 30%} of channels with rho {0.7, 0.8, 0.9}."""
+    rows = []
+    for k, rho in ((3, 0.7), (5, 0.8), (7, 0.9)):
+        cfg, params, ref, report, data = trained_system(k=k, rho=rho)
+        images, _ = data.batch(64, seed=990_003)
+        payload, _ = measure_payload(cfg, params, images)
+        dev = _device(cfg)
+        rows.append((f"fig21.skewness@k{k}rho{rho}", report["skewness"],
+                     f"required={rho}"))
+        rows.append((f"fig21.accuracy@k{k}rho{rho}", report["accuracy"],
+                     f"disorder={report['disorder_rate']:.3f}"))
+        rows.append((f"fig21.tx_ms@k{k}rho{rho}",
+                     dev.tx_time(payload / 64) * 1e3, ""))
+    return rows
+
+
+# --------------------------------------- Figure 22: CPU frequency ----------
+def fig22_cpu_frequency() -> list[tuple]:
+    cfg, params, ref, _, data = trained_system()
+    mc, _ = trained_baselines()["mcunet"]
+    images, _ = data.batch(64, seed=990_004)
+    rows = []
+    for mhz in (216, 128, 64, 16):
+        dev = DeviceModel(cpu_hz=mhz * 1e6, link_bps=cfg.link_bps)
+        _, cost = run_offload_inference(cfg, params, images, device=dev)
+        mcost = mcunet_cost(cfg, device=dev)
+        rows.append((f"fig22.agilenn.latency_ms@{mhz}MHz",
+                     cost.end_to_end_s * 1e3, ""))
+        rows.append((f"fig22.mcunet.latency_ms@{mhz}MHz",
+                     mcost.end_to_end_s * 1e3, ""))
+    return rows
+
+
+# --------------------------------------- Figure 23: network bandwidth ------
+def fig23_bandwidth() -> list[tuple]:
+    cfg, params, ref, _, data = trained_system()
+    dp, _ = trained_baselines()["deepcod"]
+    images, _ = data.batch(64, seed=990_005)
+    rmacs = remote_nn_macs(cfg, cfg.image_size // 4)
+    rows = []
+    for bps in (6e6, 1e6, 270e3):
+        dev = DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=bps)
+        _, cost = run_offload_inference(cfg, params, images, device=dev)
+        dcost = deepcod_cost(cfg, dp, images, remote_macs=rmacs, device=dev)
+        label = f"{bps/1e6:.2f}Mbps" if bps >= 1e6 else f"{bps/1e3:.0f}kbps"
+        rows.append((f"fig23.agilenn.latency_ms@{label}",
+                     cost.end_to_end_s * 1e3, "paper: <=100ms @270kbps"))
+        rows.append((f"fig23.deepcod.latency_ms@{label}",
+                     dcost.end_to_end_s * 1e3, ""))
+    return rows
+
+
+# --------------------------------------- Figure 24: XAI tool choice --------
+def fig24_xai_choice() -> list[tuple]:
+    rows = []
+    for method in ("ig", "saliency"):
+        cfg, params, ref, report, data = trained_system(xai_method=method)
+        rows.append((f"fig24.accuracy@{method}", report["accuracy"],
+                     f"skew={report['skewness']:.3f}"))
+        rows.append((f"fig24.train_wall_s@{method}", report["train_wall_s"],
+                     "IG costs ig_steps gradient passes per eval"))
+    return rows
+
+
+# ------------------------------------------ Figure 19: energy --------------
+def fig19_energy() -> list[tuple]:
+    cfg, params, ref, _, data = trained_system()
+    baselines = trained_baselines()
+    images, _ = data.batch(64, seed=990_006)
+    dev = _device(cfg)
+    _, cost = run_offload_inference(cfg, params, images)
+    agile_mj = energy_per_inference(cfg, cost) * 1e3
+    mcost = mcunet_cost(cfg)
+    mcu_mj = dev.energy(mcost.local_macs, 0) * 1e3
+    dp, _ = baselines["deepcod"]
+    dcost = deepcod_cost(cfg, dp, images,
+                         remote_macs=remote_nn_macs(cfg, cfg.image_size // 4))
+    dc_mj = dev.energy(dcost.local_macs, dcost.payload_bytes) * 1e3
+    return [("fig19.agilenn.energy_mj", agile_mj, ""),
+            ("fig19.mcunet.energy_mj", mcu_mj,
+             f"ratio={mcu_mj / max(agile_mj, 1e-9):.1f}x (paper: >8x)"),
+            ("fig19.deepcod.energy_mj", dc_mj,
+             f"ratio={dc_mj / max(agile_mj, 1e-9):.1f}x (paper: >=2.5x)")]
+
+
+# ------------------------------------------ Figure 20: memory/storage ------
+def fig20_memory() -> list[tuple]:
+    from repro.nn.module import param_count
+    from repro.serve.device_model import mcu_memory_model
+    cfg, params, ref, _, data = trained_system()
+    baselines = trained_baselines()
+    feat_hw = cfg.image_size // 4
+    local_params = (param_count(params["extractor"]) + param_count(params["local"]))
+    act = cfg.image_size * cfg.image_size * 3 + feat_hw ** 2 * cfg.extractor_channels
+    agile_mem = mcu_memory_model(local_params, act)
+    mc, _ = baselines["mcunet"]
+    mc_mem = mcu_memory_model(param_count(mc), act * 4)
+    return [("fig20.agilenn.flash_kb", agile_mem["flash_bytes"] / 1024, ""),
+            ("fig20.agilenn.sram_kb", agile_mem["sram_bytes"] / 1024,
+             "STM32F746: 320KB SRAM / 1MB flash"),
+            ("fig20.mcunet.flash_kb", mc_mem["flash_bytes"] / 1024,
+             f"ratio={mc_mem['flash_bytes'] / max(agile_mem['flash_bytes'], 1):.1f}x (paper: ~5x)")]
+
+
+ALL_FIGURES = {
+    "fig16": fig16_latency_accuracy,
+    "tab2": tab2_transmission,
+    "fig17": fig17_compression_sweep,
+    "fig18": fig18_alpha_sweep,
+    "fig19": fig19_energy,
+    "fig20": fig20_memory,
+    "fig21": fig21_skewness_grid,
+    "fig22": fig22_cpu_frequency,
+    "fig23": fig23_bandwidth,
+    "fig24": fig24_xai_choice,
+}

@@ -1,0 +1,110 @@
+"""Roofline benchmark (§Roofline deliverable).
+
+Primary terms come from the ANALYTIC model (repro.roofline.analytic) —
+XLA's cost_analysis on this backend reports per-device flops with loop
+bodies counted once, so the compiled numbers undercount scanned programs
+(verified; see EXPERIMENTS.md).  The dry-run JSON supplies the structural
+evidence: per-device HLO flops/bytes and the collective op inventory
+(which all-gather/all-reduce/all-to-all/etc. the sharding lowered to).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.shapes import get_shape
+from repro.launch.steps import n_microbatches
+from repro.roofline.analysis import model_flops
+from repro.roofline.analytic import MeshSpec, analytic_roofline, total_param_count
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIPS = {("whisper-tiny", "long_500k")}
+
+
+def load_results(path: str = None) -> list[dict]:
+    path = path or os.path.join(REPO, "dryrun_single_pod.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def _hlo_evidence(path=None) -> dict:
+    out = {}
+    for rec in load_results(path):
+        if "collectives" in rec:
+            out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def _fsdp_serve(cfg) -> bool:
+    pb = total_param_count(cfg) * (2 if cfg.param_dtype == "bfloat16" else 4)
+    return pb / 2**30 / 16 > 12.0
+
+
+def full_table(mesh: MeshSpec | None = None, *, with_hlo: bool = True):
+    """[(arch, shape, analytic dict, hlo rec or None)] for all 40 pairs."""
+    mesh = mesh or MeshSpec()
+    hlo = _hlo_evidence() if with_hlo else {}
+    rows = []
+    from repro.configs import ASSIGNED_ARCHS
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if (arch, shape_name) in SKIPS:
+                rows.append((arch, shape_name, None, None))
+                continue
+            shape = get_shape(shape_name)
+            r = analytic_roofline(cfg, shape, mesh,
+                                  n_micro=n_microbatches(cfg, shape),
+                                  fsdp_serve=_fsdp_serve(cfg) and shape.kind != "train")
+            rows.append((arch, shape_name, r, hlo.get((arch, shape_name))))
+    return rows
+
+
+def roofline_rows() -> list[tuple]:
+    out = []
+    for arch, shape_name, r, hlo in full_table():
+        name = f"roofline.{arch}.{shape_name}"
+        if r is None:
+            out.append((name, 0.0, "skipped (see DESIGN.md)"))
+            continue
+        cfg, shape = get_config(arch), get_shape(shape_name)
+        useful = model_flops(cfg, shape) / max(r["flops"], 1.0)
+        out.append((f"{name}.compute_s", r["compute_s"], f"dominant={r['dominant']}"))
+        out.append((f"{name}.memory_s", r["memory_s"], ""))
+        coll_kinds = ""
+        if hlo:
+            kinds = {k: v for k, v in hlo["collectives"]["counts"].items() if v}
+            coll_kinds = "hlo_ops=" + "+".join(f"{k}:{v}" for k, v in kinds.items())
+        out.append((f"{name}.collective_s", r["collective_s"], coll_kinds))
+        out.append((f"{name}.model_flop_ratio", useful, "6ND (or 2ND) / analytic"))
+    return out
+
+
+def summary_table() -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline (single pod)."""
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | dominant"
+             " | MODEL/EST flops | HLO collectives (counts) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch, shape_name, r, hlo in full_table():
+        if r is None:
+            lines.append(f"| {arch} | {shape_name} | — | — | — | skip | — | "
+                         "enc-dec audio (DESIGN.md) |")
+            continue
+        cfg, shape = get_config(arch), get_shape(shape_name)
+        useful = model_flops(cfg, shape) / max(r["flops"], 1.0)
+        kinds = "-"
+        if hlo:
+            nonzero = {k: v for k, v in hlo["collectives"]["counts"].items() if v}
+            kinds = " ".join(f"{k.replace('all-','a')}:{v}" for k, v in nonzero.items()) or "-"
+        lines.append(
+            f"| {arch} | {shape_name} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant'].replace('_s', '')} | {useful:.2f} | {kinds} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary_table())

@@ -1,0 +1,55 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure benchmarks train a small
+synthetic-data AgileNN system once (cached) and reuse it; the roofline
+table reads the dry-run JSON dumps if present.
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig16,tab2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure keys (fig16..fig24, tab2, "
+                         "kernels, roofline)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.ablations import ABLATIONS
+    from benchmarks.kernel_micro import kernel_micro_rows
+    from benchmarks.paper_figures import ALL_FIGURES
+    from benchmarks.roofline_table import roofline_rows
+
+    suites = dict(ALL_FIGURES)
+    suites.update(ABLATIONS)
+    suites["kernels"] = kernel_micro_rows
+    suites["roofline"] = roofline_rows
+
+    selected = list(suites) if not args.only else args.only.split(",")
+    print("name,value,derived")
+    failed = 0
+    for key in selected:
+        if key not in suites:
+            print(f"{key},ERROR,unknown suite", flush=True)
+            continue
+        try:
+            for name, value, derived in suites[key]():
+                if isinstance(value, float):
+                    value = f"{value:.6g}"
+                print(f"{name},{value},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{key},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(limit=3, file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Reproduce the paper's comparison story in one script: train AgileNN and
+all four baselines on the same synthetic data, print the Figure-16-style
+latency/accuracy/energy table.
+
+  PYTHONPATH=src python examples/baselines_compare.py
+"""
+import numpy as np
+
+from benchmarks.common import trained_baselines, trained_system
+from benchmarks.paper_figures import (
+    fig16_latency_accuracy,
+    fig19_energy,
+    tab2_transmission,
+)
+
+
+def main():
+    print("training AgileNN + baselines on synthetic data (cached) ...")
+    trained_system()
+    trained_baselines()
+    print(f"\n{'name':42s} {'value':>12s}  derived")
+    for fn in (fig16_latency_accuracy, tab2_transmission, fig19_energy):
+        for name, value, derived in fn():
+            v = f"{value:.4g}" if isinstance(value, float) else str(value)
+            print(f"{name:42s} {v:>12s}  {derived}")
+
+
+if __name__ == "__main__":
+    main()

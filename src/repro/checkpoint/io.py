@@ -1,0 +1,44 @@
+"""Checkpointing: flat-key npz save/restore of parameter pytrees."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in paths:
+        key = "/".join(_k(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _k(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of `like` (shape/dtype template)."""
+    data = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = "/".join(_k(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    _, treedef2 = jax.tree_util.tree_flatten(like)
+    return jax.tree_util.tree_unflatten(treedef2, leaves)

@@ -1,0 +1,84 @@
+"""LZW codec (paper §6 uses standard LZW [49] after quantization).
+
+Operates on byte sequences; used by the offload runtime to measure the
+actual transmitted payload size (Table 2 / Figure 21(c) reproductions).
+Pure Python — it runs on the host side of the serving engine, not inside
+jit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def lzw_encode(data: bytes) -> list[int]:
+    """Classic LZW: returns a list of integer codes."""
+    if not data:
+        return []
+    table = {bytes([i]): i for i in range(256)}
+    next_code = 256
+    out = []
+    w = bytes([data[0]])
+    for b in data[1:]:
+        wb = w + bytes([b])
+        if wb in table:
+            w = wb
+        else:
+            out.append(table[w])
+            table[wb] = next_code
+            next_code += 1
+            w = bytes([b])
+    out.append(table[w])
+    return out
+
+
+def lzw_decode(codes: list[int]) -> bytes:
+    if not codes:
+        return b""
+    table = {i: bytes([i]) for i in range(256)}
+    next_code = 256
+    w = table[codes[0]]
+    out = [w]
+    for c in codes[1:]:
+        if c in table:
+            entry = table[c]
+        elif c == next_code:
+            entry = w + w[:1]
+        else:
+            raise ValueError(f"bad LZW code {c}")
+        out.append(entry)
+        table[next_code] = w + entry[:1]
+        next_code += 1
+        w = entry
+    return b"".join(out)
+
+
+def lzw_encoded_bytes(codes: list[int]) -> int:
+    """Size of the code stream with variable-width packing (as the MCU
+    implementation does): code i is emitted at the bit width needed for
+    the table size at that moment."""
+    if not codes:
+        return 0
+    bits = 0
+    table_size = 256
+    width = 9
+    for _ in codes:
+        bits += width
+        table_size += 1
+        if table_size >= (1 << width):
+            width += 1
+    return (bits + 7) // 8
+
+
+def compress_payload(data: bytes) -> tuple[int, list[int]]:
+    """Returns (compressed_byte_count, codes)."""
+    codes = lzw_encode(data)
+    return lzw_encoded_bytes(codes), codes
+
+
+def pack_indices(idx: np.ndarray, bits: int) -> bytes:
+    """Bit-pack quantization indices (B*H*W*C elements, `bits` bits each)."""
+    idx = np.asarray(idx, dtype=np.uint8).ravel()
+    if bits == 8:
+        return idx.tobytes()
+    bitstream = np.unpackbits(idx[:, None], axis=1, count=8)[:, 8 - bits:]
+    return np.packbits(bitstream.ravel()).tobytes()

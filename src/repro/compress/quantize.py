@@ -1,0 +1,45 @@
+"""Learning-based quantization of offloaded features (paper §6, [4]).
+
+Soft-to-hard vector quantization (Agustsson et al. 2017), scalar variant:
+a trainable codebook of L centers; training uses a softmax-weighted soft
+assignment (differentiable), inference uses hard nearest-center indices
+(straight-through estimator bridges the two).  The hard indices are what
+the runtime LZW-compresses and puts on the radio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantizer_init(n_centers: int = 8, lo: float = -4.0, hi: float = 4.0):
+    """Codebook initialized to a uniform grid (learns during training)."""
+    return {"centers": jnp.linspace(lo, hi, n_centers).astype(jnp.float32)}
+
+
+def soft_quantize(params, x, *, temperature: float = 1.0):
+    """Differentiable soft assignment: sum_l softmax(-d^2/T) * c_l."""
+    d2 = (x[..., None] - params["centers"]) ** 2
+    w = jax.nn.softmax(-d2 / temperature, axis=-1)
+    return jnp.sum(w * params["centers"], axis=-1)
+
+
+def hard_indices(params, x) -> jnp.ndarray:
+    """Nearest-center index per element (what gets transmitted)."""
+    d2 = (x[..., None] - params["centers"]) ** 2
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def dequantize(params, idx) -> jnp.ndarray:
+    return jnp.take(params["centers"], idx)
+
+
+def quantize_ste(params, x, *, temperature: float = 1.0):
+    """Train-time op: hard values forward, soft gradient backward."""
+    soft = soft_quantize(params, x, temperature=temperature)
+    hard = dequantize(params, hard_indices(params, x))
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def quantization_bits(n_centers: int) -> int:
+    return max(1, (n_centers - 1).bit_length())

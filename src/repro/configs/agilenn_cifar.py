@@ -1,0 +1,33 @@
+"""The paper's own evaluation configuration: AgileNN on CIFAR-scale images.
+
+Feature extractor: 2 conv layers x 24 channels; Local NN: GAP + dense;
+Remote NN: MobileNetV2-style (first conv removed, consumes extractor
+features); Reference NN: a larger pre-trained CNN (EfficientNet role).
+(Paper §7: images scaled to 96x96.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import AgileSpec
+
+
+@dataclass(frozen=True)
+class AgileNNConfig:
+    name: str = "agilenn-cifar"
+    image_size: int = 32           # synthetic CIFAR-like (96 in the paper; 32 keeps CPU tests fast)
+    n_classes: int = 10
+    extractor_channels: int = 24   # paper: 2 conv layers, 24 output channels each
+    extractor_layers: int = 2
+    local_hidden: int = 0          # Local NN = GAP + dense (minimum complexity)
+    remote_width: int = 64         # MobileNetV2-ish width multiplier base
+    remote_blocks: int = 6
+    reference_width: int = 96      # larger reference CNN (pre-trained)
+    reference_blocks: int = 8
+    agile: AgileSpec = field(default_factory=lambda: AgileSpec(
+        enabled=True, extractor_channels=24, k=5, rho=0.8, lam=0.3,
+        alpha_temperature=6.0, ig_steps=16))
+    # device model (paper's implementation, §6-7)
+    mcu_hz: float = 216e6          # STM32F746 Cortex-M7
+    link_bps: float = 6e6          # ESP-WROOM WiFi, UDP 6 Mbps
+    mcu_macs_per_cycle: float = 1.0  # CMSIS-NN int8 MAC throughput (approx)

@@ -1,0 +1,165 @@
+"""AgileNN joint model (paper Figure 5): extractor + Local NN + Remote NN
++ combiner + quantizer, with the XAI-driven skewness-manipulation loss.
+
+Parameter tree:
+  extractor   2-conv feature extractor (deployed on the weak device)
+  local       GAP + dense Local NN (deployed on the weak device)
+  remote      MobileNetV2-style Remote NN (deployed on the server/pod)
+  combiner    alpha = sigmoid(w / T)
+  quant       learned scalar codebook for the offloaded channels
+  mapping     channel permutation (training-time only; folded into the
+              extractor's last conv for deployment)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.quantize import (
+    dequantize,
+    hard_indices,
+    quantize_ste,
+    quantizer_init,
+)
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.core.combiner import alpha_value, combine_predictions, combiner_init
+from repro.core.skewness import combined_loss
+from repro.core.splitter import split_features
+from repro.core.xai import evaluate_importance
+from repro.models.cnn import (
+    extractor_apply,
+    extractor_init,
+    local_nn_apply,
+    local_nn_init,
+    reference_nn_apply,
+    remote_nn_apply,
+    remote_nn_init,
+)
+from repro.nn.module import split_keys
+
+
+def init_agile_params(cfg: AgileNNConfig, key, *, extractor_params=None) -> dict:
+    """extractor_params: pre-trained weights from the pre-processing stage
+    (§3.2/§5); falls back to fresh init."""
+    C, k = cfg.extractor_channels, cfg.agile.k
+    kk = split_keys(key, ["extractor", "local", "remote", "combiner"])
+    return {
+        "extractor": extractor_params if extractor_params is not None else
+        extractor_init(kk["extractor"], channels=C, n_layers=cfg.extractor_layers),
+        "local": local_nn_init(kk["local"], k, cfg.n_classes, hidden=cfg.local_hidden),
+        "remote": remote_nn_init(kk["remote"], C - k, cfg.n_classes,
+                                 width=cfg.remote_width, blocks=cfg.remote_blocks),
+        "combiner": combiner_init(0.5, cfg.agile.alpha_temperature),
+        "quant": quantizer_init(n_centers=8),
+        "mapping": jnp.arange(C, dtype=jnp.int32),   # identity until Alg. 1 runs
+    }
+
+
+def extract_features(cfg: AgileNNConfig, params, images):
+    """Extractor + (training-time) mapping permutation."""
+    feats = extractor_apply(params["extractor"], images)
+    return jnp.take(feats, params["mapping"], axis=-1)
+
+
+def agile_forward(cfg: AgileNNConfig, params, images, *, train: bool = True,
+                  quantize: bool = True, alpha_override=None):
+    """Full split pipeline.  Returns (combined_logits, internals dict)."""
+    feats = extract_features(cfg, params, images)
+    f_local, f_remote = split_features(feats, cfg.agile.k)
+    if quantize:
+        if train:
+            f_remote_q = quantize_ste(params["quant"], f_remote)
+        else:
+            f_remote_q = dequantize(params["quant"], hard_indices(params["quant"], f_remote))
+    else:
+        f_remote_q = f_remote
+    local_logits = local_nn_apply(params["local"], f_local)
+    remote_logits = remote_nn_apply(params["remote"], f_remote_q)
+    logits = combine_predictions(params["combiner"], local_logits, remote_logits,
+                                 temperature=cfg.agile.alpha_temperature,
+                                 alpha_override=alpha_override)
+    return logits, {
+        "features": feats,
+        "local_logits": local_logits,
+        "remote_logits": remote_logits,
+        "alpha": alpha_value(params["combiner"], cfg.agile.alpha_temperature),
+    }
+
+
+def reference_predict_fn(cfg: AgileNNConfig, ref_params) -> Callable:
+    """predict(features) -> logits, for the XAI tool (reference NN consumes
+    the full extracted feature map, §3.1)."""
+    def predict(feats):
+        return reference_nn_apply(ref_params, feats)
+    return predict
+
+
+def batch_importance(cfg: AgileNNConfig, ref_params, feats, labels, *,
+                     method: str = "ig"):
+    """Normalized channel importance (B, C) + validity weights (B,).
+
+    Per §3.1 the reference NN's output is only used when it predicts the
+    training label correctly; other samples get weight 0 in the skewness
+    losses.
+    """
+    predict = reference_predict_fn(cfg, ref_params)
+    imp = evaluate_importance(predict, feats, labels, method=method,
+                              steps=cfg.agile.ig_steps)
+    ref_pred = jnp.argmax(predict(feats), axis=-1)
+    valid = (ref_pred == labels).astype(jnp.float32)
+    return imp, valid
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def agile_loss(cfg: AgileNNConfig, params, ref_params, images, labels, *,
+               xai_method: str = "ig", ordering: str = "disorder",
+               lam: "float | None" = None):
+    """The unified training loss (§4.2).  Returns (loss, metrics).
+
+    ordering/lam overrides feed the Figure-9/Figure-10 ablations."""
+    logits, internals = agile_forward(cfg, params, images, train=True)
+    pred_loss = cross_entropy(logits, labels)
+
+    feats = internals["features"]
+    # reference/XAI path must not backprop into the reference NN; gradients
+    # DO flow into the extractor through `feats` (that is how skewness is
+    # manipulated).
+    imp, valid = batch_importance(cfg, jax.lax.stop_gradient(ref_params),
+                                  feats, labels, method=xai_method)
+    # zero-out invalid rows by replacing with an 'ideal' importance that
+    # produces zero loss: all mass on channel 0.
+    C = imp.shape[-1]
+    ideal = jax.nn.one_hot(jnp.zeros((imp.shape[0],), jnp.int32), C)
+    imp_eff = jnp.where(valid[:, None] > 0, imp, ideal)
+
+    total, metrics = combined_loss(pred_loss, imp_eff, k=cfg.agile.k,
+                                   rho=cfg.agile.rho,
+                                   lam=cfg.agile.lam if lam is None else lam,
+                                   ordering=ordering)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    metrics.update(accuracy=acc, alpha=internals["alpha"],
+                   xai_valid_fraction=jnp.mean(valid))
+    return total, metrics
+
+
+def agile_predict(cfg: AgileNNConfig, params, images, *, alpha_override=None):
+    """Deployment-path prediction (hard quantization)."""
+    logits, internals = agile_forward(cfg, params, images, train=False,
+                                      alpha_override=alpha_override)
+    return logits, internals
+
+
+def offload_payload_arrays(cfg: AgileNNConfig, params, images):
+    """What the device actually transmits: hard quantization indices of the
+    less-important channels (to be bit-packed + LZW'd by the runtime)."""
+    feats = extract_features(cfg, params, images)
+    _, f_remote = split_features(feats, cfg.agile.k)
+    return hard_indices(params["quant"], f_remote)

@@ -1,0 +1,160 @@
+"""AgileNN split serving for the LM backbones (DESIGN.md §4).
+
+The paper's technique applied to the assigned architectures: a weak edge
+device runs a *lightweight token-feature extractor* (embedding + one
+gated projection); the extractor's d_agile feature channels are
+importance-skewed during training (same Eq.1/2 losses, IG against a
+reference LM) so the top-k channels feed a tiny on-device next-token
+head, while the remaining channels are quantized + compressed and
+offloaded to the Remote NN — the full backbone on the pod — whose logits
+are alpha-combined with the local head's.
+
+This mirrors Figure 5 one-to-one at the token level:
+  extractor   embed -> silu-gated dense -> (B, T, C_agile)
+  Local NN    last-token top-k channels -> dense -> vocab logits
+  Remote NN   full backbone consuming remote-channel features projected
+              back into d_model (plus the raw tokens' embeddings — the
+              split is on the *extractor features*, as in the paper)
+  reference   a frozen (tracked) LM head over the extractor features
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.quantize import (
+    dequantize,
+    hard_indices,
+    quantize_ste,
+    quantizer_init,
+)
+from repro.configs.base import ArchConfig
+from repro.core.combiner import alpha_value, combine_predictions, combiner_init
+from repro.core.skewness import combined_loss
+from repro.core.splitter import split_features
+from repro.core.xai import evaluate_importance
+from repro.models import backbone as bb
+from repro.nn.activations import silu
+from repro.nn.linear import dense_apply, dense_init, embedding_apply, embedding_init
+from repro.nn.module import split_keys
+
+
+def init_agile_lm_params(cfg: ArchConfig, key) -> dict:
+    """Extractor/local/combiner/quantizer + remote backbone + reference."""
+    a = cfg.agile
+    C = a.extractor_channels
+    kk = split_keys(key, ["embed", "gate", "proj", "local", "remote",
+                          "ref", "back"])
+    return {
+        "extractor": {
+            "embed": embedding_init(kk["embed"], cfg.vocab, C),
+            "gate": dense_init(kk["gate"], C, C, use_bias=True),
+            "proj": dense_init(kk["proj"], C, C, use_bias=False),
+        },
+        "local": dense_init(kk["local"], a.k, cfg.vocab, use_bias=False),
+        "remote_in": dense_init(kk["remote"], C - a.k, cfg.d_model,
+                                use_bias=False),
+        "reference": dense_init(kk["ref"], C, cfg.vocab, use_bias=False),
+        "combiner": combiner_init(0.5, a.alpha_temperature),
+        "quant": quantizer_init(n_centers=8),
+        "backbone": bb.init_params(cfg, kk["back"]),
+    }
+
+
+def extract_token_features(params, tokens):
+    """The on-device extractor: (B, T) -> (B, T, C_agile)."""
+    e = params["extractor"]
+    x = embedding_apply(e["embed"], tokens)
+    return dense_apply(e["proj"], x * silu(dense_apply(e["gate"], x)))
+
+
+def agile_lm_forward(cfg: ArchConfig, params, tokens, *, train: bool = True,
+                     alpha_override=None):
+    """Next-token logits for the LAST position via the split pipeline.
+
+    Returns (logits (B, vocab), internals)."""
+    a = cfg.agile
+    feats = extract_token_features(params, tokens)          # (B, T, C)
+    f_local, f_remote = split_features(feats, a.k)
+    if train:
+        f_remote_q = quantize_ste(params["quant"], f_remote)
+    else:
+        f_remote_q = dequantize(params["quant"],
+                                hard_indices(params["quant"], f_remote))
+    # local head: tiny dense on the last token's top-k channels
+    local_logits = dense_apply(params["local"], f_local[:, -1])
+    # remote: backbone consumes token embeddings + projected remote features
+    h = bb.forward_hidden(cfg, {**params["backbone"]},
+                          {"tokens": tokens})
+    h = h + dense_apply(params["remote_in"], f_remote_q)
+    w = bb._readout_weight(cfg, params["backbone"])
+    remote_logits = h[:, -1].astype(jnp.float32) @ w.astype(jnp.float32)
+    logits = combine_predictions(params["combiner"], local_logits,
+                                 remote_logits,
+                                 temperature=a.alpha_temperature,
+                                 alpha_override=alpha_override)
+    return logits, {
+        "features": feats,
+        "local_logits": local_logits,
+        "remote_logits": remote_logits,
+        "alpha": alpha_value(params["combiner"], a.alpha_temperature),
+    }
+
+
+def _token_importance(cfg: ArchConfig, ref_w, feats, targets, *,
+                      method: str = "ig", steps: int = 8):
+    """Channel importance of the LAST token's features under the reference
+    head (a linear readout over extractor features — cheap and exact for
+    IG with few steps)."""
+    last = feats[:, -1]
+
+    def predict(f):
+        return dense_apply(ref_w, f)
+
+    return evaluate_importance(predict, last, targets, method=method,
+                               steps=steps)
+
+
+def agile_lm_loss(cfg: ArchConfig, params, tokens, labels_last, *,
+                  xai_method: str = "ig"):
+    """Unified loss on next-token prediction of the final position.
+
+    tokens: (B, T); labels_last: (B,) the T+1-th token.
+    """
+    a = cfg.agile
+    logits, internals = agile_lm_forward(cfg, params, tokens, train=True)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    pred_loss = -jnp.mean(
+        jnp.take_along_axis(logp, labels_last[:, None], axis=-1))
+
+    ref_w = jax.lax.stop_gradient(params["reference"])
+    imp = _token_importance(cfg, ref_w, internals["features"], labels_last,
+                            method=xai_method, steps=a.ig_steps)
+    ref_logits = dense_apply(ref_w, internals["features"][:, -1])
+    valid = (jnp.argmax(ref_logits, -1) == labels_last).astype(jnp.float32)
+    ideal = jax.nn.one_hot(jnp.zeros((imp.shape[0],), jnp.int32),
+                           imp.shape[-1])
+    imp_eff = jnp.where(valid[:, None] > 0, imp, ideal)
+    total, metrics = combined_loss(pred_loss, imp_eff, k=a.k, rho=a.rho,
+                                   lam=a.lam)
+    # train the reference head alongside (tracking; stop-grad features)
+    ref_ce = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(dense_apply(
+            params["reference"],
+            jax.lax.stop_gradient(internals["features"][:, -1]))),
+        labels_last[:, None], axis=-1))
+    total = total + 0.3 * ref_ce
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels_last).astype(jnp.float32))
+    metrics.update(accuracy=acc, alpha=internals["alpha"],
+                   xai_valid_fraction=jnp.mean(valid), ref_ce=ref_ce)
+    return total, metrics
+
+
+def offload_payload_bits(cfg: ArchConfig, params, tokens) -> int:
+    """Bits the device would transmit per request (last-token remote
+    channels, 3-bit codebook) — before LZW."""
+    feats = extract_token_features(params, tokens)
+    _, f_remote = split_features(feats, cfg.agile.k)
+    return int(f_remote[:, -1].size) * 3

@@ -1,0 +1,260 @@
+"""Comparison baselines (paper §7): edge-only, MCUNet-proxy (local-only),
+DeepCOD-style learned sparse encoder, SPINN-style early-exit partitioning.
+
+Each baseline exposes init / train-step pieces + a `runtime_cost` that uses
+the same DeviceModel accounting as AgileNN, so Figure 16/19/22/23-style
+comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.lzw import compress_payload, pack_indices
+from repro.compress.quantize import (
+    hard_indices,
+    quantization_bits,
+    quantize_ste,
+    quantizer_init,
+)
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.core.agile import cross_entropy
+from repro.models.cnn import (
+    conv_macs,
+    extractor_apply,
+    extractor_init,
+    extractor_macs,
+    local_nn_macs,
+    remote_nn_apply,
+    remote_nn_init,
+)
+from repro.nn.linear import conv2d_apply, conv2d_init, dense_apply, dense_init
+from repro.nn.module import split_keys
+from repro.serve.device_model import DeviceModel, InferenceCost
+
+
+# ========================================================== edge-only ======
+def edge_only_payload(images: np.ndarray) -> int:
+    """LZW on the raw uint8 image; returns total bytes for the batch."""
+    arr = np.asarray(images)
+    arr = np.clip((arr - arr.min()) / max(float(np.ptp(arr)), 1e-6) * 255,
+                  0, 255).astype(np.uint8)
+    total = 0
+    for b in range(arr.shape[0]):
+        nbytes, _ = compress_payload(arr[b].tobytes())
+        total += nbytes
+    return total
+
+
+def edge_only_cost(cfg: AgileNNConfig, images, *, remote_macs: float,
+                   device: DeviceModel | None = None) -> InferenceCost:
+    device = device or DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps)
+    payload = edge_only_payload(images) / images.shape[0]
+    return InferenceCost(
+        local_compute_s=device.compute_time(0.0), tx_s=device.tx_time(payload),
+        server_s=device.server_time(remote_macs), payload_bytes=payload,
+        local_macs=0.0, remote_macs=remote_macs)
+
+
+# ================================================== MCUNet proxy (local) ===
+def mcunet_init(key, cfg: AgileNNConfig, *, width: int = 32, blocks: int = 4):
+    """A NAS-proxy compact CNN executed fully on-device."""
+    kk = split_keys(key, ["stem", "body", "fc"])
+    p = {"stem": conv2d_init(kk["stem"], 3, width)}
+    p["body"] = remote_nn_init(kk["body"], width, cfg.n_classes,
+                               width=width, blocks=blocks)
+    return p
+
+
+def mcunet_apply(params, images):
+    x = jax.nn.relu(conv2d_apply(params["stem"], images, stride=2))
+    return remote_nn_apply(params["body"], x)
+
+
+def mcunet_macs(cfg: AgileNNConfig, *, width: int = 32, blocks: int = 4) -> int:
+    s = cfg.image_size
+    total = conv_macs(s, s, 3, 3, width, stride=2)
+    s //= 2
+    # same structure as remote_nn_macs but starting at `width` input
+    c = width
+    total += s * s * c * width
+    for i in range(blocks):
+        cout = width * 2 if i >= blocks // 2 else width
+        stride = 2 if i == blocks // 2 else 1
+        mid = c * 4
+        total += s * s * c * mid
+        s //= stride
+        total += s * s * mid * 9
+        total += s * s * mid * cout
+        c = cout
+    return total + c * cfg.n_classes
+
+
+def mcunet_cost(cfg: AgileNNConfig, *, device: DeviceModel | None = None,
+                width: int = 32, blocks: int = 4) -> InferenceCost:
+    device = device or DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps)
+    macs = mcunet_macs(cfg, width=width, blocks=blocks)
+    return InferenceCost(local_compute_s=device.compute_time(macs), tx_s=0.0,
+                         server_s=0.0, payload_bytes=0.0, local_macs=macs,
+                         remote_macs=0.0)
+
+
+# ================================================== DeepCOD-style encoder ==
+def deepcod_init(key, cfg: AgileNNConfig, *, code_channels: int = 0):
+    """Local learned encoder (extractor + 1x1 bottleneck) -> quantize ->
+    remote decoder/classifier; trained end-to-end with an L1 sparsity
+    penalty on the code (the paper's 'sparsity constraint').
+
+    code_channels defaults to the same transmitted-channel count as
+    AgileNN (C - k) so the Table-2 byte comparison is apples-to-apples
+    (the paper keeps accuracy comparable and measures bytes)."""
+    code_channels = code_channels or (cfg.extractor_channels - cfg.agile.k)
+    kk = split_keys(key, ["ex", "bottleneck", "remote"])
+    return {
+        "ex": extractor_init(kk["ex"], channels=cfg.extractor_channels,
+                             n_layers=cfg.extractor_layers),
+        "bottleneck": conv2d_init(kk["bottleneck"], cfg.extractor_channels,
+                                  code_channels, kernel=1),
+        "remote": remote_nn_init(kk["remote"], code_channels, cfg.n_classes,
+                                 width=cfg.remote_width, blocks=cfg.remote_blocks),
+        "quant": quantizer_init(n_centers=8),
+    }
+
+
+def deepcod_code(params, images):
+    feats = extractor_apply(params["ex"], images)
+    return conv2d_apply(params["bottleneck"], feats)
+
+
+def deepcod_forward(params, images, *, train: bool = True):
+    code = deepcod_code(params, images)
+    code_q = quantize_ste(params["quant"], code) if train else \
+        jnp.take(params["quant"]["centers"], hard_indices(params["quant"], code))
+    logits = remote_nn_apply(params["remote"], code_q)
+    return logits, code
+
+
+def deepcod_loss(params, images, labels, *, sparsity_weight: float = 1e-3):
+    logits, code = deepcod_forward(params, images, train=True)
+    ce = cross_entropy(logits, labels)
+    l1 = jnp.mean(jnp.abs(code))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ce + sparsity_weight * l1, {"ce": ce, "l1": l1, "accuracy": acc}
+
+
+def deepcod_payload(params, images) -> int:
+    idx = np.asarray(hard_indices(params["quant"], deepcod_code(params, images)))
+    bits = quantization_bits(params["quant"]["centers"].shape[0])
+    total = 0
+    for b in range(idx.shape[0]):
+        packed = pack_indices(idx[b], bits)
+        nbytes, _ = compress_payload(packed)
+        total += nbytes
+    return total
+
+
+def deepcod_local_macs(cfg: AgileNNConfig, code_channels: int = 0) -> int:
+    code_channels = code_channels or (cfg.extractor_channels - cfg.agile.k)
+    feat_hw = cfg.image_size // (2 ** cfg.extractor_layers)
+    return (extractor_macs(cfg.image_size, 3, cfg.extractor_channels,
+                           cfg.extractor_layers)
+            + feat_hw * feat_hw * cfg.extractor_channels * code_channels)
+
+
+def deepcod_cost(cfg: AgileNNConfig, params, images, *, remote_macs: float,
+                 device: DeviceModel | None = None,
+                 code_channels: int = 0) -> InferenceCost:
+    device = device or DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps)
+    payload = deepcod_payload(params, images) / images.shape[0]
+    macs = deepcod_local_macs(cfg, code_channels)
+    return InferenceCost(local_compute_s=device.compute_time(macs),
+                         tx_s=device.tx_time(payload),
+                         server_s=device.server_time(remote_macs),
+                         payload_bytes=payload, local_macs=macs,
+                         remote_macs=remote_macs)
+
+
+# ===================================================== SPINN-style exits ===
+def spinn_init(key, cfg: AgileNNConfig):
+    """Partitioned net with a local early-exit head: local = extractor +
+    exit classifier; remote = full classifier on (quantized) features."""
+    kk = split_keys(key, ["ex", "exit", "remote"])
+    return {
+        "ex": extractor_init(kk["ex"], channels=cfg.extractor_channels,
+                             n_layers=cfg.extractor_layers),
+        "exit": dense_init(kk["exit"], cfg.extractor_channels, cfg.n_classes),
+        "remote": remote_nn_init(kk["remote"], cfg.extractor_channels,
+                                 cfg.n_classes, width=cfg.remote_width,
+                                 blocks=cfg.remote_blocks),
+        "quant": quantizer_init(n_centers=8),
+    }
+
+
+def spinn_forward(params, images, *, train: bool = True):
+    feats = extractor_apply(params["ex"], images)
+    exit_logits = dense_apply(params["exit"], jnp.mean(feats, axis=(1, 2)))
+    fq = quantize_ste(params["quant"], feats) if train else \
+        jnp.take(params["quant"]["centers"], hard_indices(params["quant"], feats))
+    remote_logits = remote_nn_apply(params["remote"], fq)
+    return exit_logits, remote_logits, feats
+
+
+def spinn_loss(params, images, labels):
+    exit_logits, remote_logits, _ = spinn_forward(params, images, train=True)
+    ce = cross_entropy(remote_logits, labels) + 0.5 * cross_entropy(exit_logits, labels)
+    acc = jnp.mean((jnp.argmax(remote_logits, -1) == labels).astype(jnp.float32))
+    return ce, {"accuracy": acc}
+
+
+def spinn_cost(cfg: AgileNNConfig, params, images, *, remote_macs: float,
+               exit_threshold: float = 0.9,
+               device: DeviceModel | None = None) -> InferenceCost:
+    """Expected cost: early-exit samples stay local; the rest offload."""
+    device = device or DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps)
+    exit_logits, _, feats = spinn_forward(params, images, train=False)
+    conf = jnp.max(jax.nn.softmax(exit_logits, -1), axis=-1)
+    stay = np.asarray(conf >= exit_threshold)
+    idx = np.asarray(hard_indices(params["quant"], feats))
+    bits = quantization_bits(params["quant"]["centers"].shape[0])
+    payload = 0
+    for b in range(idx.shape[0]):
+        if not stay[b]:
+            packed = pack_indices(idx[b], bits)
+            nbytes, _ = compress_payload(packed)
+            payload += nbytes
+    feat_hw = cfg.image_size // (2 ** cfg.extractor_layers)
+    macs = (extractor_macs(cfg.image_size, 3, cfg.extractor_channels,
+                           cfg.extractor_layers)
+            + local_nn_macs(cfg.extractor_channels, cfg.n_classes, feat_hw))
+    offload_frac = 1.0 - float(stay.mean())
+    per_payload = payload / images.shape[0]
+    return InferenceCost(local_compute_s=device.compute_time(macs),
+                         tx_s=device.tx_time(per_payload),
+                         server_s=device.server_time(remote_macs) * offload_frac,
+                         payload_bytes=per_payload, local_macs=macs,
+                         remote_macs=remote_macs * offload_frac)
+
+
+# ------------------------------------------------------- generic trainer ---
+def train_baseline(loss_fn, params, data, *, steps: int, batch_size: int = 32,
+                   lr: float = 0.02, seed_base: int = 50_000):
+    """SGD loop shared by the DeepCOD/SPINN/MCUNet baselines."""
+    from repro.optim.sgd import sgd_init, sgd_update
+    opt = sgd_init(params)
+
+    @jax.jit
+    def step(p, o, images, labels, lr):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, images, labels)
+        p, o = sgd_update(p, grads, o, lr=lr)
+        return p, o, loss, metrics
+
+    metrics = {}
+    for i in range(steps):
+        images, labels = data.batch(batch_size, seed=seed_base + i)
+        cur_lr = lr * (0.1 if i > steps * 0.7 else 1.0)
+        params, opt, loss, metrics = step(params, opt, images, labels, cur_lr)
+    return params, {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,28 @@
+"""Local/remote prediction combination (paper §3.3).
+
+final = alpha * local + (1 - alpha) * remote, with
+alpha = sigmoid(w / T): w trainable, T in [4, 8] softens the sigmoid so
+training cannot collapse alpha to 0/1 and starve the Local NN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def combiner_init(init_alpha: float = 0.5, temperature: float = 6.0):
+    """Parameterize so sigmoid(w/T) == init_alpha at start."""
+    w = temperature * jnp.log(init_alpha / (1.0 - init_alpha)) if init_alpha != 0.5 else 0.0
+    return {"w": jnp.asarray(w, jnp.float32)}
+
+
+def alpha_value(params, temperature: float) -> jnp.ndarray:
+    return jax.nn.sigmoid(params["w"] / temperature)
+
+
+def combine_predictions(params, local_logits, remote_logits, *,
+                        temperature: float = 6.0, alpha_override=None):
+    """Point-to-point weighted sum over aligned class channels.  The
+    runtime may override alpha (paper: user-tunable at deployment)."""
+    a = alpha_override if alpha_override is not None else alpha_value(params, temperature)
+    return a * local_logits + (1.0 - a) * remote_logits

@@ -1,0 +1,83 @@
+"""Skewness-manipulation losses (paper Eq. 1, Eq. 2, §4) and metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def disorder_loss(importance: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Eq. (1): max(0, max(I2) - min(I1)) averaged over the batch.
+
+    importance: (B, C) normalized channel importances; the first k channels
+    are the designated local (top-k) slots.  Non-zero iff any non-local
+    channel out-ranks a local one.
+    """
+    i1 = importance[:, :k]
+    i2 = importance[:, k:]
+    viol = jnp.maximum(0.0, jnp.max(i2, axis=-1) - jnp.min(i1, axis=-1))
+    return jnp.mean(viol)
+
+
+def skewness_loss(importance: jnp.ndarray, k: int, rho: float) -> jnp.ndarray:
+    """Eq. (2): max(0, rho - |I1|_1) averaged over the batch."""
+    i1_mass = jnp.sum(importance[:, :k], axis=-1)
+    return jnp.mean(jnp.maximum(0.0, rho - i1_mass))
+
+
+def descent_loss(importance: jnp.ndarray) -> jnp.ndarray:
+    """The strawman §4.1 L_descent = ||I - sort(I, desc)||^2 (used by the
+    ablation benchmark to reproduce Figure 9's accuracy drop).
+
+    Implemented via lax.top_k over all C channels (= full descending
+    sort): sort/argsort VJPs hit a jax-internal gather issue in this
+    environment, while top_k differentiates cleanly."""
+    C = importance.shape[-1]
+    i_sorted, _ = jax.lax.top_k(importance, C)
+    return jnp.mean(jnp.sum((importance - i_sorted) ** 2, axis=-1))
+
+
+def combined_loss(prediction_loss, importance, *, k: int, rho: float,
+                  lam: float, ordering: str = "disorder"):
+    """§4.2: L = lam * L_pred + (1 - lam) * (L_skew + L_disorder).
+
+    ordering="descent" swaps in the strawman L_descent (full sort) for the
+    Figure-9 ablation.  Returns (total, metrics dict).
+    """
+    if ordering == "descent":
+        l_dis = descent_loss(importance)
+    else:
+        l_dis = disorder_loss(importance, k)
+    l_skew = skewness_loss(importance, k, rho)
+    total = lam * prediction_loss + (1.0 - lam) * (l_skew + l_dis)
+    return total, {
+        "loss_prediction": prediction_loss,
+        "loss_disorder": l_dis,
+        "loss_skewness": l_skew,
+    }
+
+
+# --------------------------------------------------------------- metrics ---
+def topk_mass(importance: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-sample cumulative normalized importance of the first k channels."""
+    return jnp.sum(importance[:, :k], axis=-1)
+
+
+def achieved_skewness(importance: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Batch-mean top-k mass (compare against the rho requirement)."""
+    return jnp.mean(topk_mass(importance, k))
+
+
+def disorder_rate(importance: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Fraction of samples where some non-local channel out-ranks a local
+    one (the paper's '% disorder cases', target < 2%)."""
+    viol = jnp.max(importance[:, k:], axis=-1) > jnp.min(importance[:, :k], axis=-1)
+    return jnp.mean(viol.astype(jnp.float32))
+
+
+def natural_skewness(importance: jnp.ndarray, frac: float = 0.2) -> jnp.ndarray:
+    """§2.3 metric: normalized importance mass of the top-`frac` channels
+    (by rank, not by position) per sample."""
+    C = importance.shape[-1]
+    k = max(1, int(round(frac * C)))
+    topv = jnp.sort(importance, axis=-1)[:, ::-1][:, :k]
+    return jnp.sum(topv, axis=-1)

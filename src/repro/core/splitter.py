@@ -1,0 +1,24 @@
+"""Runtime feature split (paper §3, Figure 5).
+
+At inference the XAI tool is unavailable; the disorder loss guarantees the
+top-k important features sit in the FIRST k channels, so the split is a
+zero-cost slice — this is precisely the computation the paper migrates
+from online inference to offline training.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def split_features(feats: jnp.ndarray, k: int):
+    """feats: (B, ..., C) -> (local (B, ..., k), remote (B, ..., C-k))."""
+    return feats[..., :k], feats[..., k:]
+
+
+def merge_features(local: jnp.ndarray, remote: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([local, remote], axis=-1)
+
+
+def apply_channel_permutation(feats: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """Reorder channels (training-time mapping layer; see core.mapping)."""
+    return jnp.take(feats, perm, axis=-1)

@@ -1,0 +1,115 @@
+"""Pallas TPU flash-attention kernel (causal, GQA, optional sliding window).
+
+TPU-native adaptation of the attention hot spot: the grid walks
+(batch*kv_head, q_block); each program streams KV blocks for its row of
+queries through VMEM with an online-softmax accumulator held in VREGs.
+Block shapes are MXU-aligned (last dim 128, sublane multiples of 8).
+
+Layout: q (B, Hq, T, D), k/v (B, Hkv, S, D) — heads-major so a (T, D)
+query tile and (S_blk, D) KV tiles are contiguous VMEM blocks.
+
+GQA: the q block index ranges over Hq; kv index = hq * Hkv // Hq.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+                 window: int, q_block: int, kv_block: int, seq_len: int):
+    """One (q_block, D) tile of queries vs all KV blocks.
+
+    Refs (VMEM): q (q_block, D); k/v (S, D); o (q_block, D).
+    """
+    qi = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32) * scale          # (Tq, D)
+    D = q.shape[-1]
+    Tq = q.shape[0]
+    n_kv = seq_len // kv_block
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (Tq, 1), 0)
+
+    def body(kv_i, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.ds(kv_i * kv_block, kv_block), :].astype(jnp.float32)
+        v = v_ref[pl.ds(kv_i * kv_block, kv_block), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Tq, Skv)
+        k_pos = kv_i * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (1, kv_block), 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((Tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Tq, 1), jnp.float32)
+    a0 = jnp.zeros((Tq, D), jnp.float32)
+    if causal:
+        # skip fully-masked KV blocks past the diagonal
+        hi = jnp.minimum(n_kv, (qi + 1) * q_block // kv_block + 1)
+    else:
+        hi = n_kv
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-20)
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_block: int = 128, kv_block: int = 128,
+                        interpret: bool = False):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D).  T, S multiples of the blocks.
+
+    Returns (B, Hq, T, D) in q.dtype.
+    """
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert T % q_block == 0 and S % kv_block == 0, (T, S, q_block, kv_block)
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    grid = (B, Hq, T // q_block)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, seq_len=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, q_block, D),
+                         lambda b, h, i: (b, h, i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((None, None, S, D),
+                         lambda b, h, i: (b, h // group, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((None, None, S, D),
+                         lambda b, h, i: (b, h // group, 0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((None, None, q_block, D),
+                               lambda b, h, i: (b, h, i, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D) -> (B, Hq, T, D)."""
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    o = jnp.einsum("bhgts,bhsd->bhgtd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, T, D).astype(q.dtype)

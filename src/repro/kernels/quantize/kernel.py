@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: learned scalar quantization of offloaded features.
+
+The AgileNN runtime hot spot on the serving side: for every feature
+element, find the nearest codebook center, emit the int8 index and the
+dequantized value in one pass.  VPU-bound; the codebook (L <= 16 centers)
+is broadcast from SMEM-resident operands into VREGs, the feature stream
+is tiled through VMEM in (rows, 128) blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, centers_ref, idx_ref, deq_ref, *, n_centers: int):
+    x = x_ref[...].astype(jnp.float32)                     # (rows, 128)
+    centers = centers_ref[...].astype(jnp.float32)         # (1, n_centers)
+    best_d = jnp.full(x.shape, jnp.inf, jnp.float32)
+    best_i = jnp.zeros(x.shape, jnp.int32)
+    best_v = jnp.zeros(x.shape, jnp.float32)
+    for c in range(n_centers):                              # unrolled: L small
+        cv = centers[0, c]
+        d = (x - cv) ** 2
+        take = d < best_d
+        best_d = jnp.where(take, d, best_d)
+        best_i = jnp.where(take, c, best_i)
+        best_v = jnp.where(take, cv, best_v)
+    idx_ref[...] = best_i.astype(jnp.int32)
+    deq_ref[...] = best_v.astype(deq_ref.dtype)
+
+
+def quantize_tpu(x, centers, *, block_rows: int = 256, interpret: bool = False):
+    """x: (N, 128k) 2D feature stream; centers: (L,).
+
+    Returns (indices int32, dequantized x.dtype), same shape as x.
+    """
+    N, W = x.shape
+    assert W % 128 == 0, W
+    assert N % block_rows == 0, (N, block_rows)
+    L = centers.shape[0]
+    grid = (N // block_rows,)
+    kernel = functools.partial(_quant_kernel, n_centers=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, L), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, W), jnp.int32),
+            jax.ShapeDtypeStruct((N, W), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, centers.reshape(1, L))

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the quantization kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, centers):
+    d2 = (x[..., None].astype(jnp.float32) - centers.astype(jnp.float32)) ** 2
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    deq = jnp.take(centers, idx).astype(x.dtype)
+    return idx, deq

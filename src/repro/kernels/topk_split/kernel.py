@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: AgileNN channel split via static permutation.
+
+The deployed split is a channel gather: out[..., c] = in[..., perm[c]],
+then a slice into (local k, remote C-k).  Because the permutation is
+static (fixed at training time — that is the point of the disorder loss),
+it compiles to a constant-index gather over the lane dimension; the
+kernel processes (rows, C) tiles and emits the permuted tile, so split
+costs one VMEM pass and zero compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _permute_kernel(x_ref, o_ref, *, perm: tuple):
+    x = x_ref[...]                                       # (rows, C)
+    cols = [x[:, p:p + 1] for p in perm]                 # static gather
+    o_ref[...] = jnp.concatenate(cols, axis=1)
+
+
+def channel_permute_tpu(x, perm, *, block_rows: int = 256,
+                        interpret: bool = False):
+    """x: (N, C); perm: static python tuple of ints."""
+    N, C = x.shape
+    assert N % block_rows == 0
+    kernel = functools.partial(_permute_kernel, perm=tuple(int(p) for p in perm))
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((N, C), x.dtype),
+        interpret=interpret,
+    )(x)

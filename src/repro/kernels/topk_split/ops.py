@@ -1,0 +1,22 @@
+"""Jit'd wrapper: permute channels and split local/remote."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_split.kernel import channel_permute_tpu
+
+
+@partial(jax.jit, static_argnames=("perm", "k", "interpret"))
+def split_op(x, *, perm: tuple, k: int, interpret: bool = True):
+    """x: (..., C) -> (local (..., k), remote (..., C-k))."""
+    shape = x.shape
+    C = shape[-1]
+    n = x.size // C
+    n_p = -(-n // 8) * 8
+    x2 = jnp.zeros((n_p, C), x.dtype).at[:n].set(x.reshape(n, C))
+    y = channel_permute_tpu(x2, perm, block_rows=n_p, interpret=interpret)
+    y = y[:n].reshape(shape)
+    return y[..., :k], y[..., k:]

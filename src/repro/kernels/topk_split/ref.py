@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the channel-permute/split kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def channel_permute_ref(x, perm):
+    return jnp.take(x, jnp.asarray(perm), axis=-1)
+
+
+def split_ref(x, perm, k: int):
+    y = channel_permute_ref(x, perm)
+    return y[..., :k], y[..., k:]

@@ -1,0 +1,127 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and dump memory/cost/collective analyses.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+The os.environ line below MUST precede any jax import: jax locks the
+device count at first backend init.  (It lives only here — tests/benches
+see the single real CPU device.)
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step
+from repro.roofline.analysis import analyze_compiled
+
+# documented skips (DESIGN.md §4): enc-dec audio family has no meaningful
+# 500k-token autoregressive decode.
+SKIPS = {("whisper-tiny", "long_500k"): "enc-dec audio: bounded decoder; see DESIGN.md"}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            skip_compile: bool = False, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    strategy = None
+    if optimized:
+        from repro.launch.steps import OPTIMIZED_STRATEGIES
+        strategy = OPTIMIZED_STRATEGIES.get((arch, shape_name))
+    t0 = time.time()
+    lowered, meta = lower_step(cfg, shape, mesh, strategy=strategy)
+    t_lower = time.time() - t0
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": meta["kind"], "lower_s": round(t_lower, 1),
+           "strategy": "optimized" if strategy is not None else "baseline"}
+    if skip_compile:
+        return rec
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    rec.update(analyze_compiled(compiled, mesh=mesh))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-compile", action="store_true",
+                    help="lower only (fast sanity sweep)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use OPTIMIZED_STRATEGIES for the §Perf hillclimb pairs")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    failures = 0
+    for multi_pod in meshes:
+        for a, s in pairs:
+            if (a, s) in SKIPS:
+                results.append({"arch": a, "shape": s,
+                                "mesh": "2x16x16" if multi_pod else "16x16",
+                                "skipped": SKIPS[(a, s)]})
+                print(f"SKIP  {a:24s} {s:12s} ({SKIPS[(a, s)]})")
+                continue
+            try:
+                rec = run_one(a, s, multi_pod=multi_pod,
+                              skip_compile=args.skip_compile,
+                              optimized=args.optimized)
+                results.append(rec)
+                mem = rec.get("memory", {}).get("peak_bytes")
+                mem_s = f"peak/dev {mem/2**30:.2f}GiB" if mem else ""
+                print(f"OK    {a:24s} {s:12s} mesh={rec['mesh']} "
+                      f"lower={rec['lower_s']}s "
+                      f"compile={rec.get('compile_s','-')}s {mem_s}")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                results.append({"arch": a, "shape": s,
+                                "mesh": "2x16x16" if multi_pod else "16x16",
+                                "error": f"{type(e).__name__}: {e}"})
+                print(f"FAIL  {a:24s} {s:12s}: {type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""Production mesh definitions (TPU v5e pod slices).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; `pod` is an outer
+data-parallel axis (batch shards over ("pod", "data")).
+
+Defined as functions, never module-level constants, so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch-sharding axes of a mesh from make_production_mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size

@@ -1,0 +1,62 @@
+"""Production serving launcher: prefill + decode loop for an architecture.
+
+  python -m repro.launch.serve --arch mixtral-8x7b --shape decode_32k --dry-run
+  python -m repro.launch.serve --arch qwen2-0.5b --local --tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        rec = dryrun.run_one(args.arch, args.shape, multi_pod=args.multi_pod)
+        print(rec)
+        return 0
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import backbone as bb
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = bb.init_params(cfg, key)
+    B, T = 2, 16
+    batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab)}
+    if cfg.vlm is not None:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.vlm.n_patches, cfg.vlm.vision_dim))
+    if cfg.encdec is not None:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encdec.n_frames, cfg.d_model))
+    logits, cache, total_T = bb.prefill(cfg, params, batch,
+                                        max_len=T + args.tokens + 8)
+    decode = jax.jit(lambda p, t, c, n: bb.decode_step(cfg, p, t, c, n))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    cl = total_T
+    t0 = time.time()
+    for i in range(args.tokens):
+        logits, cache = decode(params, tok, cache, cl)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        cl += 1
+    print(f"decoded {args.tokens} tokens x {B} in {time.time() - t0:.2f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

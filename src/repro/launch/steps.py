@@ -1,0 +1,316 @@
+"""Distributed step functions + ShapeDtypeStruct input specs for the
+dry-run and the launchers.
+
+train_step: SGD-momentum with gradient accumulation over microbatches
+(lax.scan) — the microbatch count scales with d_model so jamba/arctic
+activations fit per-device HBM (see n_microbatches).
+
+serve_step: one-token decode against the (sharded) cache.
+prefill_step: context ingestion returning last logits + cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import data_axes
+from repro.launch.partition import batch_spec, cache_shardings, param_shardings, replicated
+from repro.models import backbone as bb
+
+
+# --------------------------------------------------------------- strategy --
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """Sharding strategy knob set (§Perf hillclimbs).
+
+    model_axes: mesh axes carrying tensor parallelism for params
+      ()                 -> pure data parallel (H1: small dense models)
+      ("model",)         -> baseline 1D TP
+      ("data", "model")  -> all-chip TP (H3: big-model decode)
+    fsdp: override FSDP weight sharding (None = per-kind default)
+    expert_data_sharding: resident 2D expert placement — experts over the
+      data axes x expert-ff over model axes; removes per-microbatch FSDP
+      gathers of expert weights (H2: arctic train)
+    n_micro: gradient-accumulation override
+    """
+    model_axes: tuple = ("model",)
+    fsdp: "bool | None" = None
+    expert_data_sharding: bool = False
+    n_micro: "int | None" = None
+    bf16_grads: bool = False   # cast grads to bf16 before the all-reduce
+
+    def batch_axes(self, mesh) -> tuple:
+        return tuple(a for a in mesh.axis_names if a not in self.model_axes)
+
+
+BASELINE = Strategy()
+
+# beyond-paper optimized strategies from the §Perf hillclimb (EXPERIMENTS.md)
+OPTIMIZED_STRATEGIES: dict[tuple, Strategy] = {
+    # H1: pure DP, replicated fp32 params.  (The bf16-grad-all-reduce
+    # iteration was REFUTED: GSPMD reduces gradients inside backprop,
+    # before any post-hoc cast — EXPERIMENTS.md §Perf H1 iter 2.)
+    ("qwen2-0.5b", "train_4k"): Strategy(model_axes=(), fsdp=False),
+    # H2: resident 2D expert sharding + reduced grad accumulation
+    ("arctic-480b", "train_4k"): Strategy(expert_data_sharding=True, n_micro=4),
+    # H3: all-chip tensor parallelism, resident weights
+    ("jamba-1.5-large-398b", "decode_32k"): Strategy(
+        model_axes=("data", "model"), fsdp=False),
+}
+
+
+# ------------------------------------------------------------ microbatch ---
+def n_microbatches(cfg: ArchConfig, shape: InputShape) -> int:
+    """Gradient-accumulation factor: keeps per-device activation memory
+    bounded for the wide architectures (power of two, divides batch)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 7000:
+        n = 16
+    elif cfg.d_model >= 4096:
+        n = 8
+    elif cfg.d_model >= 1536:
+        n = 2
+    else:
+        n = 1
+    while shape.global_batch % n:
+        n //= 2
+    return max(1, n)
+
+
+# ------------------------------------------------------------ input specs --
+def make_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for one training/prefill batch."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    batch = {}
+    if cfg.vlm is not None:
+        P_img = cfg.vlm.n_patches
+        batch["patches"] = jax.ShapeDtypeStruct((B, P_img, cfg.vlm.vision_dim),
+                                                cfg.dtype)
+        t_text = T - P_img
+    else:
+        t_text = T
+    if cfg.encdec is not None:
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encdec.n_frames, cfg.d_model),
+                                               cfg.dtype)
+    batch["tokens"] = jax.ShapeDtypeStruct((B, t_text), i32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, t_text), i32)
+    return batch
+
+
+def batch_shardings(cfg: ArchConfig, batch_specs: dict, mesh,
+                    strategy: "Strategy | None" = None) -> dict:
+    from jax.sharding import NamedSharding, PartitionSpec
+    axes = (strategy or BASELINE).batch_axes(mesh)
+
+    def sharding_for(v):
+        # drop trailing batch axes until the global batch divides (e.g.
+        # pure-DP batch 256 on the 512-chip multi-pod mesh shards over
+        # (pod, data) = 32 and leaves "model" as pure replication)
+        use = list(axes)
+        while use:
+            size = 1
+            for a in use:
+                size *= mesh.shape[a]
+            if v.shape[0] % size == 0 and v.shape[0] >= size:
+                return NamedSharding(mesh, PartitionSpec(
+                    tuple(use), *([None] * (len(v.shape) - 1))))
+            use.pop()
+        return replicated(mesh)
+
+    return {k: sharding_for(v) for k, v in batch_specs.items()}
+
+
+def params_specs(cfg: ArchConfig) -> Any:
+    """Parameter ShapeDtypeStructs WITHOUT allocating (eval_shape)."""
+    return jax.eval_shape(
+        lambda: bb.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_specs(params_sds) -> Any:
+    return {"momentum": params_sds}
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape) -> Any:
+    long = shape.name == "long_500k"
+    return jax.eval_shape(
+        lambda: bb.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              long_context=long))
+
+
+# ------------------------------------------------------------ step fns -----
+def make_train_step(cfg: ArchConfig, shape: InputShape, *,
+                    lr: float = 1e-3, momentum: float = 0.9,
+                    weight_decay: float = 0.0,
+                    n_micro_override: "int | None" = None,
+                    bf16_grads: bool = False):
+    """(params, opt, batch) -> (params, opt, metrics) with microbatching."""
+    n_micro = n_micro_override or n_microbatches(cfg, shape)
+    window = cfg.sliding_window
+
+    def loss_fn(params, mb):
+        loss, metrics = bb.forward_loss(cfg, params, mb, window=window)
+        return loss, metrics
+
+    def train_step(params, opt, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            if bf16_grads:
+                # halve the gradient all-reduce payload (H1 iteration 2)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.bfloat16), grads)
+        else:
+            def reshape_mb(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+            mbs = jax.tree_util.tree_map(reshape_mb, batch)
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss / n_micro), None
+
+            gacc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (gacc0, jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            metrics = {}
+
+        def new_m(p, g, m):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            return (momentum * m.astype(jnp.float32) + g32).astype(m.dtype)
+
+        def new_p(p, m):
+            return (p.astype(jnp.float32) - lr * m.astype(jnp.float32)).astype(p.dtype)
+
+        m_upd = jax.tree_util.tree_map(new_m, params, grads, opt["momentum"])
+        p_upd = jax.tree_util.tree_map(new_p, params, m_upd)
+        return p_upd, {"momentum": m_upd}, {"loss": loss}
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: InputShape):
+    """(params, tokens (B,1), cache, cache_len) -> (logits, new_cache)."""
+
+    def serve_step(params, tokens, cache, cache_len):
+        return bb.decode_step(cfg, params, tokens, cache, cache_len)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape):
+    long = shape.name == "long_500k"
+
+    def prefill_step(params, batch):
+        logits, cache, total = bb.prefill(cfg, params, batch,
+                                          long_context=long,
+                                          max_len=shape.seq_len)
+        return logits, cache
+
+    return prefill_step
+
+
+# ---------------------------------------------------------- jit assembly ---
+def lower_step(cfg: ArchConfig, shape: InputShape, mesh, *,
+               donate: bool = True, strategy: "Strategy | None" = None):
+    """Build + lower the right step for (cfg, shape) on `mesh`.
+
+    Returns (lowered, meta) where meta records what was lowered.
+    """
+    strategy = strategy or BASELINE
+    p_sds = params_specs(cfg)
+    # training: FSDP (ZeRO-3-style) param/grad/optimizer sharding over the
+    # data axes on top of tensor parallelism; serving keeps params
+    # tensor-parallel only (resident weights, no per-token gathers) UNLESS
+    # the model doesn't fit a 16-way TP shard of v5e HBM (jamba/arctic:
+    # ~400-500B params), in which case weights are 2D-sharded over
+    # (data, model) and gathered per layer.
+    msize = 1
+    for a in strategy.model_axes:
+        msize *= mesh.shape[a]
+    serve_fsdp = _param_gib(p_sds) / max(msize, 1) > 12.0
+    if shape.kind == "train":
+        p_sh = param_shardings(p_sds, mesh, fsdp=True, strategy=strategy)
+        step = make_train_step(cfg, shape, n_micro_override=strategy.n_micro,
+                               bf16_grads=strategy.bf16_grads)
+        o_sds = opt_specs(p_sds)
+        o_sh = {"momentum": p_sh}
+        b_sds = make_batch_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, b_sds, mesh, strategy)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1) if donate else ())
+        with mesh:
+            lowered = jitted.lower(p_sds, o_sds, b_sds)
+        return lowered, {"kind": "train",
+                         "n_micro": strategy.n_micro or n_microbatches(cfg, shape)}
+
+    if shape.kind == "prefill":
+        p_sh = param_shardings(p_sds, mesh, fsdp=serve_fsdp, strategy=strategy)
+        step = make_prefill_step(cfg, shape)
+        b_sds = make_batch_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, b_sds, mesh, strategy)
+        c_sds = cache_specs(cfg, shape)
+        c_sh = cache_shardings(c_sds, mesh, batch=shape.global_batch,
+                               strategy=strategy)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(batch_spec(mesh, 2), c_sh))
+        with mesh:
+            lowered = jitted.lower(p_sds, b_sds)
+        return lowered, {"kind": "prefill"}
+
+    # decode
+    p_sh = param_shardings(p_sds, mesh, fsdp=serve_fsdp, strategy=strategy)
+    step = make_serve_step(cfg, shape)
+    b = shape.global_batch
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    baxes = strategy.batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    if baxes and b >= bsize and b % bsize == 0:
+        from jax.sharding import NamedSharding, PartitionSpec
+        tok_sh = NamedSharding(mesh, PartitionSpec(baxes, None))
+        logits_sh = NamedSharding(mesh, PartitionSpec(baxes, None))
+    else:
+        tok_sh = replicated(mesh)
+        logits_sh = None
+    c_sds = cache_specs(cfg, shape)
+    c_sh = cache_shardings(c_sds, mesh, batch=b, strategy=strategy)
+    len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(step,
+                     in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
+                     out_shardings=(logits_sh, c_sh),
+                     donate_argnums=(2,) if donate else ())
+    with mesh:
+        lowered = jitted.lower(p_sds, tok_sds, c_sds, len_sds)
+    return lowered, {"kind": "decode"}
+
+
+def _param_gib(p_sds) -> float:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(p_sds):
+        total += leaf.size * leaf.dtype.itemsize
+    return total / 2**30
+
+
+def _dsize(mesh) -> int:
+    s = 1
+    for a in data_axes(mesh):
+        s *= mesh.shape[a]
+    return s

@@ -1,0 +1,149 @@
+"""CNNs for the paper-faithful AgileNN reproduction (§6-7).
+
+- feature extractor: 2 conv layers x 24 channels (the paper's exact local
+  footprint), stride-2 each -> (B, H/4, W/4, 24) feature maps.
+- Local NN: global-average-pool + one dense layer ("minimum complexity").
+- Remote NN: MobileNetV2-style inverted-residual stack ("MobileNetV2 with
+  the first convolutional layer removed") consuming the offloaded feature
+  channels.
+- Reference NN: a wider/deeper CNN over the full feature map, pre-trained
+  to high accuracy and frozen (the EfficientNet role in §3.1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import conv2d_apply, conv2d_init, dense_apply, dense_init
+from repro.nn.module import split_keys
+from repro.nn.norm import groupnorm_apply, groupnorm_init
+
+
+def _relu6(x):
+    return jnp.minimum(jnp.maximum(x, 0.0), 6.0)
+
+
+# ------------------------------------------------------------- extractor ---
+def extractor_init(key, in_ch: int = 3, channels: int = 24, n_layers: int = 2):
+    keys = jax.random.split(key, n_layers)
+    layers = []
+    c = in_ch
+    for i in range(n_layers):
+        layers.append(conv2d_init(keys[i], c, channels, kernel=3))
+        c = channels
+    return {"convs": layers}
+
+
+def extractor_apply(params, x):
+    """x: (B, H, W, 3) -> (B, H/2^L, W/2^L, C).  ~paper-scale: 2 convs."""
+    for conv in params["convs"]:
+        x = _relu6(conv2d_apply(conv, x, stride=2))
+    return x
+
+
+# --------------------------------------------------------------- local NN --
+def local_nn_init(key, k: int, n_classes: int, hidden: int = 0):
+    kk = split_keys(key, ["fc", "fc2"])
+    if hidden:
+        return {"fc": dense_init(kk["fc"], k, hidden),
+                "fc2": dense_init(kk["fc2"], hidden, n_classes)}
+    return {"fc": dense_init(kk["fc"], k, n_classes)}
+
+
+def local_nn_apply(params, feats_local):
+    """feats_local: (B, H, W, k) -> logits (B, n_classes).  GAP + dense."""
+    x = jnp.mean(feats_local, axis=(1, 2))
+    x = dense_apply(params["fc"], x)
+    if "fc2" in params:
+        x = dense_apply(params["fc2"], jax.nn.relu(x))
+    return x
+
+
+def local_nn_macs(k: int, n_classes: int, feat_hw: int, hidden: int = 0) -> int:
+    """Multiply-accumulate count of the Local NN (for the MCU cost model)."""
+    gap = feat_hw * feat_hw * k
+    if hidden:
+        return gap + k * hidden + hidden * n_classes
+    return gap + k * n_classes
+
+
+# ---------------------------------------------- MobileNetV2-ish remote NN --
+def _inverted_residual_init(key, cin: int, cout: int, *, expand: int = 4):
+    kk = split_keys(key, ["pw1", "dw", "pw2", "n1", "n2", "n3"])
+    mid = cin * expand
+    return {
+        "pw1": conv2d_init(kk["pw1"], cin, mid, kernel=1, use_bias=False),
+        "dw": conv2d_init(kk["dw"], 1, mid, kernel=3, use_bias=False),   # depthwise
+        "pw2": conv2d_init(kk["pw2"], mid, cout, kernel=1, use_bias=False),
+        "n1": groupnorm_init(mid), "n2": groupnorm_init(mid), "n3": groupnorm_init(cout),
+    }
+
+
+def _inverted_residual_apply(p, x, *, stride: int = 1):
+    cin = x.shape[-1]
+    mid = p["n1"]["scale"].shape[0]
+    h = _relu6(groupnorm_apply(p["n1"], conv2d_apply(p["pw1"], x), groups=8))
+    # depthwise conv via feature_group_count
+    h = jax.lax.conv_general_dilated(
+        h, p["dw"]["w"], window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=mid)
+    h = _relu6(groupnorm_apply(p["n2"], h, groups=8))
+    h = groupnorm_apply(p["n3"], conv2d_apply(p["pw2"], h), groups=8)
+    if stride == 1 and h.shape[-1] == cin:
+        h = h + x
+    return h
+
+
+def remote_nn_init(key, in_ch: int, n_classes: int, *, width: int = 64,
+                   blocks: int = 6):
+    kk = split_keys(key, ["stem", "head", "fc"] + [f"b{i}" for i in range(blocks)])
+    p = {"stem": conv2d_init(kk["stem"], in_ch, width, kernel=1, use_bias=False),
+         "stem_n": groupnorm_init(width)}
+    c = width
+    blist = []
+    for i in range(blocks):
+        cout = width * 2 if i >= blocks // 2 else width
+        blist.append(_inverted_residual_init(kk[f"b{i}"], c, cout))
+        c = cout
+    p["blocks"] = blist
+    p["fc"] = dense_init(kk["fc"], c, n_classes)
+    return p
+
+
+def remote_nn_apply(params, feats):
+    """feats: (B, H, W, C_remote) -> logits."""
+    x = _relu6(groupnorm_apply(params["stem_n"], conv2d_apply(params["stem"], feats), groups=8))
+    n = len(params["blocks"])
+    for i, b in enumerate(params["blocks"]):
+        stride = 2 if i == n // 2 else 1
+        x = _inverted_residual_apply(b, x, stride=stride)
+    x = jnp.mean(x, axis=(1, 2))
+    return dense_apply(params["fc"], x)
+
+
+# ----------------------------------------------------------- reference NN --
+def reference_nn_init(key, in_ch: int, n_classes: int, *, width: int = 96,
+                      blocks: int = 8):
+    return remote_nn_init(key, in_ch, n_classes, width=width, blocks=blocks)
+
+
+reference_nn_apply = remote_nn_apply
+
+
+# ------------------------------------------------------------ cost model ---
+def conv_macs(h: int, w: int, kernel: int, cin: int, cout: int,
+              stride: int = 1) -> int:
+    return (h // stride) * (w // stride) * kernel * kernel * cin * cout
+
+
+def extractor_macs(image_size: int, in_ch: int = 3, channels: int = 24,
+                   n_layers: int = 2) -> int:
+    total, s, c = 0, image_size, in_ch
+    for _ in range(n_layers):
+        total += conv_macs(s, s, 3, c, channels, stride=2)
+        s //= 2
+        c = channels
+    return total

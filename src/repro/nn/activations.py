@@ -1,0 +1,45 @@
+"""Activation functions and gated FFNs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense_apply, dense_init
+from repro.nn.module import split_keys
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# SwiGLU feed-forward (llama/qwen/mixtral style)
+def swiglu_ffn_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    kk = split_keys(key, ["gate", "up", "down"])
+    return {
+        "gate": dense_init(kk["gate"], d_model, d_ff, use_bias=False, dtype=dtype),
+        "up": dense_init(kk["up"], d_model, d_ff, use_bias=False, dtype=dtype),
+        "down": dense_init(kk["down"], d_ff, d_model, use_bias=False, dtype=dtype),
+    }
+
+
+def swiglu_ffn_apply(params, x):
+    g = silu(dense_apply(params["gate"], x))
+    u = dense_apply(params["up"], x)
+    return dense_apply(params["down"], g * u)
+
+
+# Plain MLP (whisper/vit style)
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    kk = split_keys(key, ["fc1", "fc2"])
+    return {
+        "fc1": dense_init(kk["fc1"], d_model, d_ff, use_bias=True, dtype=dtype),
+        "fc2": dense_init(kk["fc2"], d_ff, d_model, use_bias=True, dtype=dtype),
+    }
+
+
+def mlp_apply(params, x):
+    return dense_apply(params["fc2"], gelu(dense_apply(params["fc1"], x)))

@@ -1,0 +1,39 @@
+"""Weight initializers (pure functions of a PRNG key)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def he_normal(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(2.0 / max(1, fan))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def normal(key, shape, dtype=jnp.float32, std: float = 0.02):
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def conv_kernel_fan_in(kernel_shape) -> int:
+    """Fan-in for an HWIO conv kernel (kh, kw, cin, cout)."""
+    kh, kw, cin, _ = kernel_shape
+    return kh * kw * cin

@@ -1,0 +1,90 @@
+"""Dense / conv / embedding primitives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.module import split_keys
+
+
+# ---------------------------------------------------------------- dense ----
+def dense_init(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+               dtype=jnp.float32, std: float | None = None):
+    kk = split_keys(key, ["w", "b"])
+    if std is None:
+        w = initializers.lecun_normal(kk["w"], (in_dim, out_dim), dtype, fan_in=in_dim)
+    else:
+        w = initializers.normal(kk["w"], (in_dim, out_dim), dtype, std=std)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ----------------------------------------------------------------- conv ----
+def conv2d_init(key, in_ch: int, out_ch: int, kernel: int = 3, *,
+                use_bias: bool = True, dtype=jnp.float32):
+    kk = split_keys(key, ["w", "b"])
+    shape = (kernel, kernel, in_ch, out_ch)  # HWIO
+    w = initializers.he_normal(kk["w"], shape, dtype,
+                               fan_in=initializers.conv_kernel_fan_in(shape))
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv2d_apply(params, x, *, stride: int = 1, padding: str = "SAME"):
+    """x: (B, H, W, C) NHWC."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def conv1d_init(key, in_ch: int, out_ch: int, kernel: int, *,
+                use_bias: bool = True, dtype=jnp.float32):
+    kk = split_keys(key, ["w", "b"])
+    shape = (kernel, in_ch, out_ch)  # WIO
+    fan = kernel * in_ch
+    w = initializers.he_normal(kk["w"], shape, dtype, fan_in=fan)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv1d_apply(params, x, *, stride: int = 1, padding: str = "SAME",
+                 feature_group_count: int = 1):
+    """x: (B, T, C)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride,), padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=feature_group_count)
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ------------------------------------------------------------ embedding ----
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": initializers.normal(key, (vocab, dim), dtype, std=0.02)}
+
+
+def embedding_apply(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def embedding_attend(params, x):
+    """Tied-readout logits: x @ table.T."""
+    return x @ params["table"].T

@@ -1,0 +1,71 @@
+"""Minimal functional parameter utilities.
+
+The whole framework is purely functional: parameters are nested dicts
+(pytrees) of jnp arrays.  Every layer exposes
+
+    init(key, ...) -> params        (a pytree)
+    apply(params, x, ...) -> y
+
+Helpers here cover RNG splitting, parameter counting, pytree paths and
+dtype casting.  No stateful module system -- state (KV caches, SSM
+states, optimizer moments) is always threaded explicitly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of arrays
+
+
+def split_keys(key: jax.Array, names: list[str]) -> dict[str, jax.Array]:
+    """Split one PRNG key into a dict of named keys (order-stable)."""
+    keys = jax.random.split(key, len(names))
+    return {n: k for n, k in zip(names, keys)}
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_paths(params: Params) -> Iterator[tuple[str, jax.Array]]:
+    """Yield ('a/b/c', leaf) for every leaf."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        yield name, leaf
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def map_with_path(fn: Callable[[str, jax.Array], Any], params: Params) -> Params:
+    """tree_map where fn also receives the 'a/b/c' path string."""
+
+    def _fn(path, leaf):
+        name = "/".join(_key_str(k) for k in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, params)
+
+
+def cast_floats(params: Params, dtype) -> Params:
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, params)

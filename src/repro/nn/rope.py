@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """Apply RoPE.
+
+    x: (..., T, H, D) -- T and H axes in the last three dims.
+    positions: (..., T) integer positions broadcastable against x's batch dims.
+    """
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)                      # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., T, d/2)
+    # broadcast over the head axis
+    angles = angles[..., None, :]                              # (..., T, 1, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,184 @@
+"""Mamba-style selective state-space block.
+
+Training/prefill path: chunked selective scan -- an outer lax.scan over
+sequence chunks carrying the (B, d_inner, d_state) hidden state, with an
+associative scan inside each chunk.  This bounds temporary memory to
+O(chunk * d_inner * d_state) instead of O(T * d_inner * d_state), which is
+what makes the jamba-scale configs lowerable.
+
+Decode path: O(1) per token -- carries (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.activations import silu
+from repro.nn.linear import conv1d_apply, dense_apply, dense_init
+from repro.nn.module import split_keys
+
+
+def mamba_init(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dt_rank: int | None = None, dtype=jnp.float32):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    kk = split_keys(key, ["in_proj", "conv", "x_proj", "dt_proj", "out_proj", "dt_bias"])
+    # conv kernel: depthwise (d_conv, 1, d_inner) via feature_group_count
+    conv_w = initializers.he_normal(kk["conv"], (d_conv, 1, d_inner), dtype, fan_in=d_conv)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :], (d_inner, 1))
+    dt = jax.random.uniform(kk["dt_bias"], (d_inner,), jnp.float32,
+                            minval=0.001, maxval=0.1)
+    dt_bias = jnp.log(jnp.expm1(dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(kk["in_proj"], d_model, 2 * d_inner, use_bias=False, dtype=dtype),
+        "conv_w": conv_w,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(kk["x_proj"], d_inner, dt_rank + 2 * d_state, use_bias=False, dtype=dtype),
+        "dt_proj": dense_init(kk["dt_proj"], dt_rank, d_inner, use_bias=False, dtype=dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(kk["out_proj"], d_inner, d_model, use_bias=False, dtype=dtype),
+    }
+
+
+def _ssm_params(params, x_in, *, d_state: int, dt_rank: int):
+    """Per-token SSM parameters from the post-conv activations.
+
+    x_in: (B, T, d_inner) -> dt (B,T,d_inner), B_mat/C_mat (B,T,d_state)
+    """
+    proj = dense_apply(params["x_proj"], x_in)
+    dt_low, B_mat, C_mat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dense_apply(params["dt_proj"], dt_low).astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, B_mat.astype(jnp.float32), C_mat.astype(jnp.float32)
+
+
+def _chunk_scan(h0, decay, inp):
+    """Associative scan within a chunk.
+
+    h_t = decay_t * h_{t-1} + inp_t, over axis 0 (time).
+    decay/inp: (Tc, B, d_inner, d_state); h0: (B, d_inner, d_state).
+    Returns all h (Tc, ...) and the final state.
+    """
+    # fold h0 into the first input
+    inp = inp.at[0].add(decay[0] * h0)
+
+    def combine(a, b):
+        da, xa = a
+        db, xb = b
+        return da * db, db * xa + xb
+
+    ds, hs = jax.lax.associative_scan(combine, (decay, inp), axis=0)
+    return hs, hs[-1]
+
+
+def mamba_scan(dt, A, B_mat, C_mat, x, h0, *, chunk: int = 128):
+    """Chunked selective scan.
+
+    dt, x: (B, T, d_inner); A: (d_inner, d_state);
+    B_mat, C_mat: (B, T, d_state); h0: (B, d_inner, d_state).
+    Returns y (B, T, d_inner) float32 and final state.
+    """
+    Bsz, T, d_inner = x.shape
+    d_state = A.shape[1]
+    Tc = min(chunk, T)
+    n_chunks = -(-T // Tc)
+    Tp = n_chunks * Tc
+    pad = Tp - T
+
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    dt_p, x_p, B_p, C_p = padt(dt), padt(x.astype(jnp.float32)), padt(B_mat), padt(C_mat)
+    # decay_t = exp(dt_t * A) ; inp_t = dt_t * B_t * x_t
+    # shapes: (B, T, d_inner, d_state)
+    def chunk_body(h, idx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * Tc, Tc, axis=1)
+        dt_c, x_c, B_c, C_c = sl(dt_p), sl(x_p), sl(B_p), sl(C_p)
+        dA = jnp.exp(dt_c[..., None] * (-jnp.exp(A))[None, None])   # (B,Tc,di,ds)
+        dBx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]          # (B,Tc,di,ds)
+        hs, h_last = _chunk_scan(h, dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3))
+        y_c = jnp.einsum("tbds,bts->btd", hs, C_c)
+        return h_last, y_c
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, jnp.arange(n_chunks))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, Tp, d_inner)   # (B, Tp, d_inner)
+    return y[:, :T], h_final
+
+
+def mamba_apply(params, x, *, d_state: int = 16, d_conv: int = 4,
+                dt_rank: int | None = None, chunk: int = 128,
+                return_state: bool = False):
+    """Full block for train/prefill.  x: (B, T, d_model).
+
+    With return_state, also returns the decode state ({conv, ssm}) after
+    the last token, for prefill -> decode handoff.
+    """
+    B, T, d_model = x.shape
+    d_inner = params["conv_b"].shape[0]
+    dt_rank = dt_rank or max(1, d_model // 16)
+    xz = dense_apply(params["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv
+    x_pad = jnp.pad(x_in, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    x_c = conv1d_apply({"w": params["conv_w"], "b": params["conv_b"]}, x_pad,
+                       padding="VALID", feature_group_count=d_inner)
+    x_c = silu(x_c)
+    dt, B_mat, C_mat = _ssm_params(params, x_c, d_state=d_state, dt_rank=dt_rank)
+    h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    y, h_final = mamba_scan(dt, params["A_log"], B_mat, C_mat, x_c, h0, chunk=chunk)
+    y = y + params["D"] * x_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * silu(z)
+    out = dense_apply(params["out_proj"], y)
+    if return_state:
+        state = {"conv": x_pad[:, T:, :], "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba_decode_init_state(batch: int, d_inner: int, d_state: int, d_conv: int,
+                            dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode_apply(params, x, state, *, d_state: int = 16, d_conv: int = 4,
+                       dt_rank: int | None = None):
+    """One token.  x: (B, 1, d_model).  Returns (y, new_state)."""
+    B, _, d_model = x.shape
+    d_inner = params["conv_b"].shape[0]
+    dt_rank = dt_rank or max(1, d_model // 16)
+    xz = dense_apply(params["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)          # (B, 1, d_inner)
+    conv_buf = jnp.concatenate([state["conv"], x_in], axis=1)  # (B, d_conv, d_inner)
+    x_c = jnp.einsum("bkd,kd->bd", conv_buf,
+                     params["conv_w"][:, 0, :]) + params["conv_b"]
+    x_c = silu(x_c)[:, None, :]                   # (B, 1, d_inner)
+    dt, B_mat, C_mat = _ssm_params(params, x_c, d_state=d_state, dt_rank=dt_rank)
+    dA = jnp.exp(dt[:, 0, :, None] * (-jnp.exp(params["A_log"]))[None])
+    dBx = (dt[:, 0] * x_c[:, 0].astype(jnp.float32))[..., None] * B_mat[:, 0, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, C_mat[:, 0])
+    y = y + params["D"] * x_c[:, 0].astype(jnp.float32)
+    y = (y[:, None, :].astype(x.dtype)) * silu(z)
+    out = dense_apply(params["out_proj"], y)
+    return out, {"conv": conv_buf[:, 1:], "ssm": h}
+
+
+def mamba_reference(params, x, *, d_state: int = 16, d_conv: int = 4,
+                    dt_rank: int | None = None):
+    """Sequential-oracle full block (tests): step decode over T."""
+    B, T, _ = x.shape
+    d_inner = params["conv_b"].shape[0]
+    state = mamba_decode_init_state(B, d_inner, d_state, d_conv, dtype=x.dtype)
+    ys = []
+    for t in range(T):
+        y, state = mamba_decode_apply(params, x[:, t:t + 1], state,
+                                      d_state=d_state, d_conv=d_conv, dt_rank=dt_rank)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

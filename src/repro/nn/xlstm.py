@@ -1,0 +1,262 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM training path uses a chunkwise-parallel form (lightning-attention
+style): within-chunk quadratic attention with exponential-gate decay
+masks + a cross-chunk recurrent matrix state C (B, H, D, D) carried by a
+lax.scan.  This is the TPU-native adaptation: MXU-friendly within-chunk
+matmuls, O(T/chunk) sequential steps.
+
+Gating follows the xLSTM stabilization: log-space forget-gate cumsums and
+a running max-stabilizer m, with the normalizer n lower-bounded by
+exp(-m) (|n^T q| vs 1 in the paper's notation).
+
+sLSTM is inherently sequential (state mixing) and uses a plain lax.scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.linear import dense_apply, dense_init
+from repro.nn.module import split_keys
+from repro.nn.norm import groupnorm_apply, groupnorm_init
+
+
+# ================================================================= mLSTM ===
+def mlstm_init(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    head_dim = d_model // n_heads
+    kk = split_keys(key, ["wq", "wk", "wv", "wi", "wf", "wo", "out", "norm"])
+    p = {
+        "wq": dense_init(kk["wq"], d_model, d_model, use_bias=False, dtype=dtype),
+        "wk": dense_init(kk["wk"], d_model, d_model, use_bias=False, dtype=dtype),
+        "wv": dense_init(kk["wv"], d_model, d_model, use_bias=False, dtype=dtype),
+        "wi": dense_init(kk["wi"], d_model, n_heads, use_bias=True, dtype=dtype),
+        "wf": dense_init(kk["wf"], d_model, n_heads, use_bias=True, dtype=dtype),
+        "out": dense_init(kk["out"], d_model, d_model, use_bias=False, dtype=dtype),
+        "norm": groupnorm_init(d_model, dtype),
+    }
+    # bias forget gate towards remembering
+    p["wf"]["b"] = p["wf"]["b"] + 3.0
+    return p
+
+
+def mlstm_sequential(q, k, v, log_i, log_f):
+    """Oracle: step-by-step mLSTM.  q,k,v: (B,T,H,D); gates: (B,T,H) logspace.
+
+    Returns (B, T, H, D) float32.
+    """
+    B, T, H, D = q.shape
+    C = jnp.zeros((B, H, D, D), jnp.float32)
+    n = jnp.zeros((B, H, D), jnp.float32)
+    m = jnp.full((B, H), -jnp.inf, jnp.float32)
+    ys = []
+    for t in range(T):
+        qt, kt, vt = q[:, t].astype(jnp.float32), k[:, t].astype(jnp.float32), v[:, t].astype(jnp.float32)
+        lf, li = log_f[:, t], log_i[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(li - m_new)
+        C = fg[..., None, None] * C + ig[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = fg[..., None] * n + ig[..., None] * kt
+        m = m_new
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), jnp.exp(-m))
+        ys.append(num / den[..., None])
+    return jnp.stack(ys, axis=1)
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, *, chunk: int = 64):
+    """Chunkwise-parallel mLSTM, matches mlstm_sequential.
+
+    q,k,v: (B,T,H,D) (q pre-scaled by caller); log_i/log_f: (B,T,H).
+    """
+    B, T, H, D = q.shape
+    Tc = min(chunk, T)
+    n_chunks = -(-T // Tc)
+    Tp = n_chunks * Tc
+    pad = Tp - T
+
+    def padt(a, fill=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                       constant_values=fill)
+
+    qf = padt(q.astype(jnp.float32))
+    kf = padt(k.astype(jnp.float32))
+    vf = padt(v.astype(jnp.float32))
+    # padded tail: i gate -> -inf (no contribution), f gate -> 0 (keep state)
+    lif = padt(log_i, fill=-1e30)
+    lff = padt(log_f, fill=0.0)
+
+    def reshape_c(a):
+        return a.reshape((B, n_chunks, Tc) + a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(reshape_c, (qf, kf, vf, lif, lff))
+    # per chunk: (n_chunks, B, Tc, ...)
+
+    def body(carry, xs):
+        C, n, m = carry            # (B,H,D,D), (B,H,D), (B,H)
+        qt, kt, vt, li, lf = xs    # (B,Tc,H,D) / (B,Tc,H)
+        lf_cum = jnp.cumsum(lf, axis=1)                     # inclusive cumsum
+        # local decay matrix: d[t,s] = sum_{s<j<=t} lf_j + li_s  (s <= t)
+        # log weight of (t, s) pair = lf_cum[t] - lf_cum[s] + li[s]
+        a_t = lf_cum                                        # (B,Tc,H)
+        b_s = li - lf_cum                                   # (B,Tc,H)
+        # within-chunk stabilizer per row t: m_loc[t] = max_s<=t (a_t + b_s)
+        b_run = jax.lax.cummax(b_s, axis=1)
+        m_loc = a_t + b_run                                 # (B,Tc,H)
+        # cross-chunk stabilizer: m_prev carried through decay
+        m_inter = m[:, None, :] + a_t                       # (B,Tc,H)
+        m_tot = jnp.maximum(m_loc, m_inter)                 # (B,Tc,H)
+
+        # intra-chunk attention
+        logw = (a_t[:, :, None, :] + b_s[:, None, :, :])    # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((Tc, Tc), bool))
+        logw = jnp.where(tri[None, :, :, None], logw, -jnp.inf)
+        w = jnp.exp(logw - m_tot[:, :, None, :])            # (B,t,s,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qt, kt)
+        weighted = scores * w                               # (B,t,s,H)
+        num = jnp.einsum("btsh,bshd->bthd", weighted, vt)
+        den = jnp.sum(weighted, axis=2)                     # (B,t,H)
+
+        # cross-chunk contribution: decay of previous state to step t
+        cross_w = jnp.exp(m_inter - m_tot)                  # (B,Tc,H)
+        num = num + cross_w[..., None] * jnp.einsum("bthd,bhde->bthe", qt, C)
+        den = den + cross_w * jnp.einsum("bthd,bhd->bth", qt, n)
+
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+
+        # state update to end of chunk
+        a_last = lf_cum[:, -1]                              # (B,H) total decay
+        m_new = jnp.maximum(m + a_last, jnp.max(b_s + a_last[:, None], axis=1))
+        # contribution of each in-chunk token to final state:
+        w_state = jnp.exp(b_s + a_last[:, None] - m_new[:, None])   # (B,Tc,H)
+        C_new = jnp.exp(m + a_last - m_new)[:, :, None, None] * C + \
+            jnp.einsum("bth,bthd,bthe->bhde", w_state, kt, vt)
+        n_new = jnp.exp(m + a_last - m_new)[..., None] * n + \
+            jnp.einsum("bth,bthd->bhd", w_state, kt)
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Cf, nf, mf), ys = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = ys.swapaxes(0, 1).reshape(B, Tp, H, D)
+    return y[:, :T], {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_apply(params, x, *, n_heads: int, chunk: int = 64,
+                return_state: bool = False):
+    """x: (B, T, d_model)."""
+    B, T, d_model = x.shape
+    D = d_model // n_heads
+    q = dense_apply(params["wq"], x).reshape(B, T, n_heads, D) / math.sqrt(D)
+    k = dense_apply(params["wk"], x).reshape(B, T, n_heads, D)
+    v = dense_apply(params["wv"], x).reshape(B, T, n_heads, D)
+    log_i = dense_apply(params["wi"], x).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(dense_apply(params["wf"], x).astype(jnp.float32))
+    y, state = mlstm_chunked(q, k, v, log_i, log_f, chunk=chunk)
+    y = y.reshape(B, T, d_model).astype(x.dtype)
+    y = groupnorm_apply(params["norm"], y, groups=n_heads)
+    out = dense_apply(params["out"], y)
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_decode_init_state(batch: int, n_heads: int, head_dim: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_apply(params, x, state, *, n_heads: int):
+    """One token: x (B, 1, d_model) -> (y, new_state)."""
+    B, _, d_model = x.shape
+    D = d_model // n_heads
+    q = dense_apply(params["wq"], x).reshape(B, n_heads, D).astype(jnp.float32) / math.sqrt(D)
+    k = dense_apply(params["wk"], x).reshape(B, n_heads, D).astype(jnp.float32)
+    v = dense_apply(params["wv"], x).reshape(B, n_heads, D).astype(jnp.float32)
+    li = dense_apply(params["wi"], x)[:, 0].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(dense_apply(params["wf"], x)[:, 0].astype(jnp.float32))
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(li - m_new)
+    C = fg[..., None, None] * C + ig[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fg[..., None] * n + ig[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, d_model).astype(x.dtype)
+    y = groupnorm_apply(params["norm"], y, groups=n_heads)
+    return dense_apply(params["out"], y), {"C": C, "n": n, "m": m_new}
+
+
+# ================================================================= sLSTM ===
+def slstm_init(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    kk = split_keys(key, ["wx", "wr", "norm"])
+    # gates: i, f, z, o  -> 4 * d_model
+    p = {
+        "wx": dense_init(kk["wx"], d_model, 4 * d_model, use_bias=True, dtype=dtype),
+        "wr": dense_init(kk["wr"], d_model, 4 * d_model, use_bias=False, dtype=dtype,
+                         std=1.0 / math.sqrt(d_model)),
+        "norm": groupnorm_init(d_model, dtype),
+    }
+    return p
+
+
+def slstm_step(params, xt, state, *, d_model: int):
+    """xt: (B, d_model). state: h, c, n, m each (B, d_model)."""
+    h, c, n, m = state
+    pre = dense_apply(params["wx"], xt) + dense_apply(params["wr"], h)
+    zi, zf, zz, zo = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, zi)
+    ig = jnp.exp(zi - m_new)
+    fg = jnp.exp(log_f + m - m_new)
+    c_new = fg * c + ig * jnp.tanh(zz)
+    n_new = fg * n + ig
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new.astype(xt.dtype), (h_new.astype(xt.dtype), c_new, n_new, m_new)
+
+
+def slstm_apply(params, x, *, n_heads: int, return_state: bool = False):
+    """x: (B, T, d_model) -> (B, T, d_model), sequential scan over T."""
+    B, T, d_model = x.shape
+    h0 = jnp.zeros((B, d_model), x.dtype)
+    c0 = jnp.zeros((B, d_model), jnp.float32)
+    n0 = jnp.zeros((B, d_model), jnp.float32)
+    m0 = jnp.full((B, d_model), -1e30, jnp.float32)
+
+    def body(state, xt):
+        y, new_state = slstm_step(params, xt, state, d_model=d_model)
+        return new_state, y
+
+    (h, c, n, m), ys = jax.lax.scan(body, (h0, c0, n0, m0), x.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1)
+    y = groupnorm_apply(params["norm"], y, groups=n_heads)
+    if return_state:
+        return y, {"h": h, "c": c, "n": n, "m": m}
+    return y
+
+
+def slstm_decode_init_state(batch: int, d_model: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, d_model), dtype),
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "m": jnp.full((batch, d_model), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode_apply(params, x, state, *, n_heads: int):
+    B, _, d_model = x.shape
+    y, (h, c, n, m) = slstm_step(params, x[:, 0],
+                                 (state["h"], state["c"], state["n"], state["m"]),
+                                 d_model=d_model)
+    y = groupnorm_apply(params["norm"], y[:, None, :], groups=n_heads)
+    return y, {"h": h, "c": c, "n": n, "m": m}

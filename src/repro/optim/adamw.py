@@ -1,0 +1,41 @@
+"""AdamW (used by the LM end-to-end driver).
+
+NOTE: parameter pytrees may contain tuples as *structural* nodes (the
+backbone's superblocks), so the update never uses tuple-leaf tricks —
+each state component is computed with its own tree_map.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, *, lr: float, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    step = state["step"] + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    m_new = jax.tree_util.tree_map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state["m"])
+    v_new = jax.tree_util.tree_map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads, state["v"])
+
+    def upd(p, m, v):
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        p32 = p.astype(jnp.float32)
+        return (p32 - lr * (update + weight_decay * p32)).astype(p.dtype)
+
+    p_new = jax.tree_util.tree_map(upd, params, m_new, v_new)
+    return p_new, {"m": m_new, "v": v_new, "step": step}

@@ -1,0 +1,29 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_lr: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def step_decay(step, *, base_lr: float, decay: float = 0.1,
+               milestones: tuple = (100, 150)):
+    lr = jnp.full_like(jnp.asarray(step, jnp.float32), base_lr)
+    for m in milestones:
+        lr = jnp.where(step >= m, lr * decay, lr)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    import jax
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

@@ -1,0 +1,23 @@
+"""SGD with momentum + decoupled weight decay (paper §7 training setup).
+
+NOTE: parameter pytrees may contain tuples as *structural* nodes (the
+backbone's superblocks), so the update never uses tuple-leaf tricks —
+momentum and params are computed with separate tree_maps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return {"momentum": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state, *, lr: float, momentum: float = 0.9,
+               weight_decay: float = 5e-4):
+    m_new = jax.tree_util.tree_map(
+        lambda p, g, m: momentum * m + g + weight_decay * p,
+        params, grads, state["momentum"])
+    p_new = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, m_new)
+    return p_new, {"momentum": m_new}

@@ -1,0 +1,145 @@
+"""Roofline analysis from a compiled dry-run artifact (no real hardware).
+
+Three terms per (arch x mesh), in seconds:
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+cost_analysis() gives FLOPs/bytes; collective bytes are parsed out of the
+compiled HLO text by summing operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[16,128,1024]{2,1,0}" — capture dtype + dims
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    HLO lines look like:
+      %ag = f32[16,1024]{...} all-gather(%x), replica_groups=...
+    The result shape (left of '=') is what moves on the wire (upper bound
+    for all-gather; exact for all-to-all/permute; 2x-ish for all-reduce's
+    ring but we report the logical payload).
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the op name as the instruction (not in metadata)
+            if re.search(rf"\)?\s{kind}(?:-start|-done)?\(", " " + rhs) or \
+               rhs.startswith(kind + "(") or f" {kind}(" in rhs.split("metadata")[0]:
+                if f"{kind}-done" in rhs:
+                    break  # counted at -start
+                shapes = _SHAPE_RE.findall(rhs.split(f"{kind}")[0])
+                nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+                out[kind] += nbytes
+                counts[kind] += 1
+                break
+    return {"bytes_by_kind": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def analyze_compiled(compiled, *, mesh=None) -> dict:
+    """Roofline record from a jax compiled object."""
+    n_chips = 1
+    if mesh is not None:
+        for v in mesh.shape.values():
+            n_chips *= v
+    ca_list = compiled.cost_analysis()
+    ca = ca_list[0] if isinstance(ca_list, (list, tuple)) else ca_list
+    flops = float(ca.get("flops", 0.0))
+    hbm_bytes = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (n_chips * HBM_BW)
+    collective_s = coll["total_bytes"] / (n_chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": coll,
+        "roofline": {**terms, "dominant": dominant, "chips": n_chips},
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N_active * D tokens (training; inference: 2*N_active*D)."""
+    n_active = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: top_k experts only)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd = cfg.resolved_head_dim
+    total = V * d  # embed (readout tied or separate counted once)
+    if not cfg.tie_embeddings:
+        total += V * d
+    from repro.models.backbone import sublayer_specs
+    specs = sublayer_specs(cfg)
+    per_sb = 0
+    for s in specs:
+        if s["kind"] == "attn":
+            per_sb += d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+        elif s["kind"] == "mamba":
+            h = cfg.hybrid
+            di = h.expand * d
+            per_sb += d * 2 * di + di * d + di * (max(1, d // 16) + 2 * h.d_state) \
+                + max(1, d // 16) * di
+        elif s["kind"] in ("mlstm", "slstm"):
+            per_sb += 4 * d * d if s["kind"] == "mlstm" else 8 * d * d
+        if s["ffn"] == "dense":
+            per_sb += 3 * d * cfg.d_ff if cfg.norm == "rmsnorm" else 2 * d * cfg.d_ff
+        elif s["ffn"] == "moe":
+            per_sb += 3 * d * cfg.moe.expert_d_ff * cfg.moe.top_k
+            if cfg.moe.dense_residual_ff:
+                per_sb += 3 * d * cfg.moe.dense_residual_ff
+            if cfg.moe.shared_expert_ff:
+                per_sb += 3 * d * cfg.moe.shared_expert_ff
+            per_sb += d * cfg.moe.n_experts  # router
+    total += per_sb * cfg.n_superblocks
+    if cfg.encdec is not None:
+        enc = cfg.encdec.n_encoder_layers * (4 * d * d + 2 * d * cfg.d_ff)
+        total += enc + cfg.n_layers * (4 * d * d)   # cross-attention
+    return int(total)

@@ -1,0 +1,91 @@
+"""Batched serving engine: request queue -> prefill -> stepwise decode.
+
+A deliberately small, dependency-free engine for the Remote-NN role:
+requests with equal-length prompts are grouped into one prefill; decoding
+proceeds in lockstep with per-request stop handling (static batch — the
+dry-run decode shapes correspond to one engine step).  Greedy or
+temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import backbone as bb
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray                 # (T,) prompt
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never stops early
+    temperature: float = 0.0           # 0 => greedy
+    extras: Optional[dict] = None      # patches / frames for vlm / audio
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: np.ndarray
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, n: bb.decode_step(cfg, p, t, c, n))
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def generate(self, requests: list[Request]) -> list[Completion]:
+        """All prompts must share one length (the engine's batch grouping
+        unit); returns one Completion per request."""
+        assert requests, "empty batch"
+        T = len(requests[0].tokens)
+        assert all(len(r.tokens) == T for r in requests), \
+            "group requests by prompt length"
+        B = len(requests)
+        batch = {"tokens": jnp.asarray(
+            np.stack([r.tokens for r in requests]), jnp.int32)}
+        ex = requests[0].extras or {}
+        for k in ex:
+            batch[k] = jnp.asarray(np.stack([r.extras[k] for r in requests]))
+
+        logits, cache, total_T = bb.prefill(
+            self.cfg, self.params, batch, max_len=self.max_len)
+        max_new = max(r.max_new_tokens for r in requests)
+        temps = requests[0].temperature
+        tok = self._sample(logits, temps)[:, None].astype(jnp.int32)
+
+        out = [[int(tok[b, 0])] for b in range(B)]
+        done = np.zeros(B, bool)
+        cl = total_T
+        steps = 1
+        for _ in range(max_new - 1):
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, tok, cache, cl)
+            tok = self._sample(logits, temps)[:, None].astype(jnp.int32)
+            cl += 1
+            steps += 1
+            t_np = np.asarray(tok[:, 0])
+            for b, r in enumerate(requests):
+                if done[b]:
+                    continue
+                out[b].append(int(t_np[b]))
+                if t_np[b] == r.eos_id or len(out[b]) >= r.max_new_tokens:
+                    done[b] = True
+        return [Completion(np.asarray(o, np.int32), steps) for o in out]

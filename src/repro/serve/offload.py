@@ -1,0 +1,93 @@
+"""AgileNN inference runtime (paper Figure 5, online path).
+
+Given trained AgileNN parameters, runs the full deployment pipeline for a
+batch of inputs and accounts every cost with the device model:
+
+  device:  extractor -> split -> Local NN        (MACs -> t_compute)
+           quantize remote channels -> bit-pack -> LZW  (payload bytes)
+  radio:   payload / bandwidth                   (t_tx)
+  server:  dequantize -> Remote NN -> logits     (t_server)
+  device:  alpha-combine                          (negligible)
+
+`run_offload_inference` returns predictions plus an InferenceCost.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compress.lzw import compress_payload, pack_indices
+from repro.compress.quantize import dequantize, quantization_bits
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.core.agile import agile_forward, offload_payload_arrays
+from repro.models.cnn import extractor_macs, local_nn_macs
+from repro.serve.device_model import DeviceModel, InferenceCost
+
+
+def remote_nn_macs(cfg: AgileNNConfig, feat_hw: int) -> int:
+    """Approximate Remote NN MACs (inverted residual stack)."""
+    C = cfg.extractor_channels - cfg.agile.k
+    w, b = cfg.remote_width, cfg.remote_blocks
+    total = feat_hw * feat_hw * C * w                      # stem 1x1
+    s, c = feat_hw, w
+    for i in range(b):
+        cout = w * 2 if i >= b // 2 else w
+        stride = 2 if i == b // 2 else 1
+        mid = c * 4
+        total += s * s * c * mid                           # pw1
+        s //= stride
+        total += s * s * mid * 9                           # dw 3x3
+        total += s * s * mid * cout                        # pw2
+        c = cout
+    total += c * cfg.n_classes
+    return total
+
+
+def measure_payload(cfg: AgileNNConfig, params, images) -> tuple[int, np.ndarray]:
+    """Exact transmitted bytes: quantize -> bit-pack -> LZW, per batch."""
+    idx = np.asarray(offload_payload_arrays(cfg, params, images))
+    bits = quantization_bits(params["quant"]["centers"].shape[0])
+    total = 0
+    for b in range(idx.shape[0]):
+        packed = pack_indices(idx[b], bits)
+        nbytes, _ = compress_payload(packed)
+        total += nbytes
+    return total, idx
+
+
+def run_offload_inference(cfg: AgileNNConfig, params, images, *,
+                          device: DeviceModel | None = None,
+                          alpha_override=None):
+    """Returns (predictions, InferenceCost averaged per sample)."""
+    device = device or DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps,
+                                   macs_per_cycle=cfg.mcu_macs_per_cycle)
+    B = images.shape[0]
+    logits, internals = agile_forward(cfg, params, images, train=False,
+                                      alpha_override=alpha_override)
+    preds = np.asarray(jnp.argmax(logits, axis=-1))
+
+    feat_hw = cfg.image_size // (2 ** cfg.extractor_layers)
+    local_macs = (extractor_macs(cfg.image_size, 3, cfg.extractor_channels,
+                                 cfg.extractor_layers)
+                  + local_nn_macs(cfg.agile.k, cfg.n_classes, feat_hw,
+                                  cfg.local_hidden))
+    payload_bytes, _ = measure_payload(cfg, params, images)
+    payload_per_sample = payload_bytes / B
+    r_macs = remote_nn_macs(cfg, feat_hw)
+
+    cost = InferenceCost(
+        local_compute_s=device.compute_time(local_macs),
+        tx_s=device.tx_time(payload_per_sample),
+        server_s=device.server_time(r_macs),
+        payload_bytes=payload_per_sample,
+        local_macs=local_macs,
+        remote_macs=r_macs,
+    )
+    return preds, cost
+
+
+def energy_per_inference(cfg: AgileNNConfig, cost: InferenceCost, *,
+                         device: DeviceModel | None = None) -> float:
+    device = device or DeviceModel(cpu_hz=cfg.mcu_hz, link_bps=cfg.link_bps)
+    return device.energy(cost.local_macs, cost.payload_bytes)

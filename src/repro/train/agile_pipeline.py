@@ -1,0 +1,244 @@
+"""The staged AgileNN training pipeline (paper §3-§5).
+
+Stage A  pre-processing: train [extractor + reference NN] end-to-end with
+         plain CE to high accuracy; freeze the reference NN; keep the
+         extractor weights as the joint-training initialization (§3.2).
+Stage B  Algorithm 1: rank channels by top-k likelihood under XAI
+         importance; build the mapping permutation (§5).
+Stage C  joint training of extractor + Local NN + Remote NN + alpha +
+         quantizer with L = lam*L_pred + (1-lam)*(L_skew + L_dis) (§4.2).
+Stage D  deployment: fold the mapping layer into the extractor (§5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.core.agile import (
+    agile_forward,
+    agile_loss,
+    batch_importance,
+    cross_entropy,
+    extract_features,
+    init_agile_params,
+    reference_predict_fn,
+)
+from repro.core.channel_selection import (
+    build_mapping_permutation,
+    select_initial_channels,
+    topk_channel_counts,
+)
+from repro.core.skewness import achieved_skewness, disorder_rate
+from repro.core.xai import evaluate_importance
+from repro.data.synthetic import ImageDatasetSpec, SyntheticImages
+from repro.models.cnn import extractor_apply, extractor_init, reference_nn_apply, reference_nn_init
+from repro.nn.module import split_keys
+from repro.optim.sgd import sgd_init, sgd_update
+
+
+# ------------------------------------------------------------- stage A -----
+def pretrain_reference(cfg: AgileNNConfig, data: SyntheticImages, key, *,
+                       steps: int = 300, batch_size: int = 64, lr: float = 0.05,
+                       log_every: int = 0):
+    """Returns (extractor_params, reference_params, final train accuracy)."""
+    kk = split_keys(key, ["ex", "ref"])
+    ex = extractor_init(kk["ex"], channels=cfg.extractor_channels,
+                        n_layers=cfg.extractor_layers)
+    ref = reference_nn_init(kk["ref"], cfg.extractor_channels, cfg.n_classes,
+                            width=cfg.reference_width, blocks=cfg.reference_blocks)
+    params = {"ex": ex, "ref": ref}
+    opt = sgd_init(params)
+
+    def loss_fn(p, images, labels):
+        feats = extractor_apply(p["ex"], images)
+        logits = reference_nn_apply(p["ref"], feats)
+        loss = cross_entropy(logits, labels)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, acc
+
+    @jax.jit
+    def step_fn(p, o, images, labels, lr):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, images, labels)
+        p, o = sgd_update(p, grads, o, lr=lr)
+        return p, o, loss, acc
+
+    acc = 0.0
+    for i in range(steps):
+        images, labels = data.batch(batch_size, seed=i)
+        cur_lr = lr * (0.1 if i > steps * 0.7 else 1.0)
+        params, opt, loss, acc = step_fn(params, opt, images, labels, cur_lr)
+        if log_every and i % log_every == 0:
+            print(f"[stage A] step {i} loss {float(loss):.3f} acc {float(acc):.3f}")
+    return params["ex"], params["ref"], float(acc)
+
+
+# ------------------------------------------------------------- stage B -----
+def run_channel_selection(cfg: AgileNNConfig, extractor_params, ref_params,
+                          data: SyntheticImages, *, n_batches: int = 8,
+                          batch_size: int = 64, method: str = "ig") -> np.ndarray:
+    """Algorithm 1 over the training set; returns the mapping permutation."""
+    predict = reference_predict_fn(cfg, ref_params)
+
+    @jax.jit
+    def counts_for(images, labels):
+        feats = extractor_apply(extractor_params, images)
+        imp = evaluate_importance(predict, feats, labels, method=method,
+                                  steps=cfg.agile.ig_steps)
+        return topk_channel_counts(imp, cfg.agile.k)
+
+    counts = jnp.zeros((cfg.extractor_channels,))
+    total = 0
+    for i in range(n_batches):
+        images, labels = data.batch(batch_size, seed=1000 + i)
+        counts = counts + counts_for(images, labels)
+        total += batch_size
+    p = np.asarray(counts) / total
+    ranking = np.argsort(-p, kind="stable")
+    selected = ranking[:cfg.agile.k]
+    return build_mapping_permutation(selected, cfg.extractor_channels)
+
+
+# ------------------------------------------------------------- stage C -----
+def joint_train(cfg: AgileNNConfig, params, ref_params,
+                data: SyntheticImages, *, steps: int = 400,
+                batch_size: int = 64, lr: float = 0.02,
+                ref_track_lr: float = 0.01,
+                xai_method: str = "ig", log_every: int = 0,
+                record_curve: bool = False, ordering: str = "disorder",
+                lam: "float | None" = None):
+    """Joint training with the unified loss.
+
+    The reference NN is *tracked*: each step it takes one CE step on the
+    current (stop-gradient) features so its predictions — and therefore
+    the XAI importance evaluation — stay accurate while the extractor
+    drifts.  (The paper requires an accurate reference for correct XAI
+    (§2.2) but does not spell out drift handling; see DESIGN.md.)
+
+    Returns (params, ref_params, history).
+    """
+    params = dict(params)
+    mapping = params.pop("mapping")   # integer permutation: not trainable
+    opt = sgd_init(params)
+    ref_opt = sgd_init(ref_params)
+
+    @partial(jax.jit, static_argnames=("method",))
+    def step_fn(p, o, rp, ro, images, labels, lr, method="ig"):
+        def loss_fn(pp):
+            return agile_loss(cfg, {**pp, "mapping": mapping}, rp,
+                              images, labels, xai_method=method,
+                              ordering=ordering, lam=lam)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        p, o = sgd_update(p, grads, o, lr=lr)
+        # reference tracking step on the fresh extractor output
+        feats = jax.lax.stop_gradient(
+            extract_features(cfg, {**p, "mapping": mapping}, images))
+
+        def ref_loss(rpp):
+            return cross_entropy(reference_nn_apply(rpp, feats), labels)
+
+        rgrads = jax.grad(ref_loss)(rp)
+        rp, ro = sgd_update(rp, rgrads, ro, lr=ref_track_lr)
+        return p, o, rp, ro, loss, metrics
+
+    history = []
+    for i in range(steps):
+        images, labels = data.batch(batch_size, seed=20_000 + i)
+        cur_lr = lr * (0.1 if i > steps * 0.7 else 1.0)
+        params, opt, ref_params, ref_opt, loss, metrics = step_fn(
+            params, opt, ref_params, ref_opt, images, labels, cur_lr,
+            method=xai_method)
+        if record_curve or (log_every and i % log_every == 0):
+            row = {k: float(v) for k, v in metrics.items()}
+            row["step"] = i
+            row["loss"] = float(loss)
+            history.append(row)
+            if log_every and i % log_every == 0:
+                print(f"[stage C] step {i} loss {row['loss']:.3f} "
+                      f"acc {row['accuracy']:.3f} skew_loss {row['loss_skewness']:.3f}")
+    params = dict(params)
+    params["mapping"] = mapping
+    return params, ref_params, history
+
+
+# ------------------------------------------------------------- stage D -----
+def finalize_for_deployment(cfg: AgileNNConfig, params):
+    """Fold the mapping permutation into the extractor's last conv (the
+    mapping layer is discarded, §5 Figure 12)."""
+    from repro.core.channel_selection import fold_permutation_into_conv
+    perm = np.asarray(params["mapping"])
+    out = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    out = dict(out)
+    convs = list(out["extractor"]["convs"])
+    convs[-1] = fold_permutation_into_conv(convs[-1], perm)
+    out["extractor"] = {"convs": convs}
+    out["mapping"] = jnp.arange(cfg.extractor_channels, dtype=jnp.int32)
+    return out
+
+
+# ----------------------------------------------------------- evaluation ----
+def evaluate(cfg: AgileNNConfig, params, ref_params, data: SyntheticImages, *,
+             n_batches: int = 4, batch_size: int = 128,
+             xai_method: str = "ig", alpha_override=None):
+    """Test-set metrics: accuracy, achieved skewness, disorder rate."""
+    predict = reference_predict_fn(cfg, ref_params)
+
+    @jax.jit
+    def eval_batch(images, labels):
+        logits, internals = agile_forward(cfg, params, images, train=False,
+                                          alpha_override=alpha_override)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        imp = evaluate_importance(predict, internals["features"], labels,
+                                  method=xai_method, steps=cfg.agile.ig_steps)
+        return acc, achieved_skewness(imp, cfg.agile.k), disorder_rate(imp, cfg.agile.k)
+
+    accs, skews, disorders = [], [], []
+    for i in range(n_batches):
+        images, labels = data.batch(batch_size, seed=900_000 + i)
+        a, s, d = eval_batch(images, labels)
+        accs.append(float(a)); skews.append(float(s)); disorders.append(float(d))
+    return {"accuracy": float(np.mean(accs)),
+            "skewness": float(np.mean(skews)),
+            "disorder_rate": float(np.mean(disorders))}
+
+
+def run_full_pipeline(cfg: AgileNNConfig, *, seed: int = 0,
+                      pretrain_steps: int = 300, joint_steps: int = 400,
+                      batch_size: int = 64, xai_method: str = "ig",
+                      log_every: int = 0, noise: float = 0.35,
+                      ordering: str = "disorder", lam: "float | None" = None,
+                      random_channels: bool = False):
+    """End-to-end stages A-D.  Returns (params, ref_params, report)."""
+    data = SyntheticImages(ImageDatasetSpec(
+        n_classes=cfg.n_classes, image_size=cfg.image_size, noise=noise, seed=seed))
+    key = jax.random.PRNGKey(seed)
+    kk = split_keys(key, ["pre", "joint"])
+
+    ex_params, ref_params, ref_acc = pretrain_reference(
+        cfg, data, kk["pre"], steps=pretrain_steps, batch_size=batch_size,
+        log_every=log_every)
+    if random_channels:   # Figure-11 ablation: arbitrary initial channels
+        import numpy as _np
+        rng = _np.random.RandomState(seed + 1)
+        sel = rng.permutation(cfg.extractor_channels)[:cfg.agile.k]
+        mapping = build_mapping_permutation(sel, cfg.extractor_channels)
+    else:
+        mapping = run_channel_selection(cfg, ex_params, ref_params, data,
+                                        method=xai_method)
+    from repro.core.channel_selection import permute_reference_stem
+    ref_params = permute_reference_stem(ref_params, mapping)
+    params = init_agile_params(cfg, kk["joint"], extractor_params=ex_params)
+    params["mapping"] = jnp.asarray(mapping)
+    params, ref_params, history = joint_train(
+        cfg, params, ref_params, data, steps=joint_steps,
+        batch_size=batch_size, xai_method=xai_method, log_every=log_every,
+        ordering=ordering, lam=lam, record_curve=True)
+    params = finalize_for_deployment(cfg, params)
+    report = evaluate(cfg, params, ref_params, data, xai_method=xai_method)
+    report["reference_accuracy"] = ref_acc
+    return params, ref_params, report, history, data

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run against the single real CPU device (the 512-device flag lives
+# ONLY in repro.launch.dryrun).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

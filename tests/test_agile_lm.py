@@ -1,0 +1,91 @@
+"""AgileNN split serving on the LM backbones: trains, skews, combines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import AgileSpec
+from repro.core.agile_lm import (
+    agile_lm_forward,
+    agile_lm_loss,
+    extract_token_features,
+    init_agile_lm_params,
+    offload_payload_bits,
+)
+from repro.core.skewness import achieved_skewness
+from repro.data.synthetic import SyntheticTokens, TokenDatasetSpec
+from repro.optim.adamw import adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch="qwen2-0.5b"):
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(
+        cfg, agile=AgileSpec(enabled=True, extractor_channels=32, k=6,
+                             rho=0.7, lam=0.4, ig_steps=4))
+
+
+def test_forward_shapes():
+    cfg = _cfg()
+    params = init_agile_lm_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    logits, internals = agile_lm_forward(cfg, params, tokens)
+    assert logits.shape == (2, cfg.vocab)
+    assert internals["features"].shape == (2, 12, 32)
+    assert 0.0 < float(internals["alpha"]) < 1.0
+    assert offload_payload_bits(cfg, params, tokens) == 2 * (32 - 6) * 3
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "xlstm-350m", "mixtral-8x7b"])
+def test_loss_finite_and_grads_flow(arch):
+    cfg = _cfg(arch)
+    params = init_agile_lm_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 10), 0, cfg.vocab)
+    labels = jax.random.randint(KEY, (2,), 0, cfg.vocab)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: agile_lm_loss(cfg, p, tokens, labels), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for part in ("extractor", "local", "combiner"):
+        g = sum(float(jnp.abs(x).sum())
+                for x in jax.tree_util.tree_leaves(grads[part]))
+        assert np.isfinite(g), part
+
+
+def test_training_increases_skewness():
+    """The paper's core effect on an LM backbone: joint training raises
+    the top-k importance mass toward rho."""
+    cfg = _cfg()
+    data = SyntheticTokens(TokenDatasetSpec(vocab=32, seq_len=12, n_modes=2))
+    params = init_agile_lm_params(cfg, KEY)
+    opt = adamw_init(params)
+
+    from repro.core.agile_lm import _token_importance
+
+    def measure(p):
+        toks = jnp.asarray(data.batch(32, seed=999))
+        feats = extract_token_features(p, toks[:, :-1])
+        imp = _token_importance(cfg, p["reference"], feats, toks[:, -1],
+                                steps=4)
+        return float(achieved_skewness(imp, cfg.agile.k))
+
+    @jax.jit
+    def step(p, o, toks):
+        (loss, m), g = jax.value_and_grad(
+            lambda pp: agile_lm_loss(cfg, pp, toks[:, :-1], toks[:, -1]),
+            has_aux=True)(p)
+        p, o = adamw_update(p, g, o, lr=5e-3, weight_decay=0.0)
+        return p, o, loss
+
+    before = measure(params)
+    for i in range(100):
+        toks = jnp.asarray(data.batch(16, seed=i))
+        params, opt, loss = step(params, opt, toks)
+    after = measure(params)
+    # measured trajectory: 0.21 -> 0.56 over 100 steps (valid-fraction
+    # gating keeps the skew signal sparse early on)
+    assert after > before + 0.2, (before, after)
+    assert after > 0.45, (before, after)

@@ -1,0 +1,98 @@
+"""AgileNN core: splitter, combiner, channel selection, deployment fold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.configs.base import AgileSpec
+from repro.core.agile import agile_forward, agile_predict, init_agile_params
+from repro.core.channel_selection import (
+    build_mapping_permutation,
+    fold_permutation_into_conv,
+    permute_reference_stem,
+    topk_channel_counts,
+)
+from repro.core.combiner import alpha_value, combine_predictions, combiner_init
+from repro.core.splitter import merge_features, split_features
+from repro.models.cnn import extractor_apply, reference_nn_apply, reference_nn_init
+
+KEY = jax.random.PRNGKey(5)
+
+CFG = AgileNNConfig(image_size=16, remote_width=16, remote_blocks=2,
+                    reference_width=16, reference_blocks=2,
+                    agile=AgileSpec(enabled=True, extractor_channels=24, k=5,
+                                    rho=0.8, lam=0.3, ig_steps=2))
+
+
+def test_split_merge_roundtrip():
+    x = jax.random.normal(KEY, (2, 4, 4, 24))
+    lo, hi = split_features(x, 5)
+    assert lo.shape[-1] == 5 and hi.shape[-1] == 19
+    np.testing.assert_allclose(merge_features(lo, hi), x)
+
+
+def test_combiner_alpha_range_and_gradient_softening():
+    p = combiner_init(0.5, temperature=6.0)
+    a = alpha_value(p, 6.0)
+    np.testing.assert_allclose(float(a), 0.5, atol=1e-6)
+    # higher temperature -> smaller |d alpha / d w|
+    g4 = jax.grad(lambda w: alpha_value({"w": w}, 4.0))(jnp.asarray(1.0))
+    g8 = jax.grad(lambda w: alpha_value({"w": w}, 8.0))(jnp.asarray(1.0))
+    assert abs(float(g8)) < abs(float(g4))
+
+
+def test_combine_predictions_alpha_override():
+    lo = jnp.asarray([[1.0, 0.0]])
+    hi = jnp.asarray([[0.0, 1.0]])
+    p = combiner_init(0.5)
+    out = combine_predictions(p, lo, hi, alpha_override=1.0)
+    np.testing.assert_allclose(out, lo)
+    out = combine_predictions(p, lo, hi, alpha_override=0.0)
+    np.testing.assert_allclose(out, hi)
+
+
+def test_topk_channel_counts():
+    imp = jnp.asarray([[0.5, 0.3, 0.1, 0.1], [0.4, 0.4, 0.1, 0.1]])
+    counts = topk_channel_counts(imp, k=2)
+    np.testing.assert_allclose(np.asarray(counts), [2, 2, 0, 0])
+
+
+def test_build_mapping_permutation_valid():
+    perm = build_mapping_permutation(np.asarray([7, 2, 9]), 12)
+    assert sorted(perm.tolist()) == list(range(12))
+    assert perm[:3].tolist() == [7, 2, 9]
+
+
+def test_fold_permutation_matches_take():
+    """Folding the mapping into the last conv == explicit permutation."""
+    params = init_agile_params(CFG, KEY)
+    perm = np.random.RandomState(0).permutation(24)
+    x = jax.random.normal(KEY, (2, 16, 16, 3))
+    feats = extractor_apply(params["extractor"], x)
+    expected = jnp.take(feats, jnp.asarray(perm), axis=-1)
+    convs = list(params["extractor"]["convs"])
+    convs[-1] = fold_permutation_into_conv(convs[-1], perm)
+    folded = extractor_apply({"convs": convs}, x)
+    np.testing.assert_allclose(folded, expected, atol=1e-6)
+
+
+def test_permute_reference_stem_consistency():
+    ref = reference_nn_init(KEY, 24, 10, width=16, blocks=2)
+    x = jax.random.normal(KEY, (2, 4, 4, 24))
+    perm = np.random.RandomState(1).permutation(24)
+    mapped = jnp.take(x, jnp.asarray(perm), axis=-1)
+    ref2 = permute_reference_stem(ref, perm)
+    np.testing.assert_allclose(reference_nn_apply(ref2, mapped),
+                               reference_nn_apply(ref, x), atol=1e-5)
+
+
+def test_agile_forward_shapes_and_alpha():
+    params = init_agile_params(CFG, KEY)
+    x = jax.random.normal(KEY, (2, 16, 16, 3))
+    logits, internals = agile_forward(CFG, params, x, train=True)
+    assert logits.shape == (2, 10)
+    assert internals["features"].shape[-1] == 24
+    assert 0.0 < float(internals["alpha"]) < 1.0
+    # eval path (hard quantization) also works
+    logits2, _ = agile_predict(CFG, params, x)
+    assert logits2.shape == (2, 10)

@@ -1,0 +1,62 @@
+"""Integration: lower+compile reduced configs on a small placeholder mesh.
+
+Runs in a subprocess so the host-device-count flag never leaks into the
+main test process (mirrors how repro.launch.dryrun isolates it).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import dataclasses
+from repro.configs import get_config
+from repro.configs.shapes import get_shape
+from repro.launch.steps import Strategy, lower_step
+from repro.roofline.analysis import analyze_compiled
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+out = []
+for arch, shape_name, strat in [
+    ("qwen2-0.5b", "train_4k", None),
+    ("mixtral-8x7b", "decode_32k", None),
+    ("jamba-1.5-large-398b", "prefill_32k", None),
+    ("qwen2-0.5b", "train_4k", Strategy(model_axes=(), fsdp=False)),
+]:
+    cfg = get_config(arch).reduced()
+    shape = dataclasses.replace(get_shape(shape_name), global_batch=8,
+                                seq_len=64)
+    lowered, meta = lower_step(cfg, shape, mesh, strategy=strat)
+    compiled = lowered.compile()
+    rec = analyze_compiled(compiled, mesh=mesh)
+    out.append({"arch": arch, "shape": shape_name,
+                "strategy": "opt" if strat else "base",
+                "counts": rec["collectives"]["counts"]})
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize("dummy", [0])
+def test_lower_compile_small_mesh(dummy):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=480)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    recs = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert len(recs) == 4
+    base = next(r for r in recs
+                if r["arch"] == "qwen2-0.5b" and r["strategy"] == "base")
+    opt = next(r for r in recs
+               if r["arch"] == "qwen2-0.5b" and r["strategy"] == "opt")
+    # the H1-style pure-DP strategy must eliminate the gathers/all-to-alls
+    assert opt["counts"]["all-gather"] < base["counts"]["all-gather"] or \
+        sum(opt["counts"].values()) < sum(base["counts"].values())

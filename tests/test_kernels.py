@@ -1,0 +1,86 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(deliverable c: per-kernel allclose against ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import flash_attention_op
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.quantize.ops import quantize_op
+from repro.kernels.quantize.ref import quantize_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.topk_split.ops import split_op
+from repro.kernels.topk_split.ref import split_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,D", [
+    (1, 128, 4, 2, 64),
+    (2, 256, 2, 2, 32),
+    (1, 128, 8, 4, 128),
+    (1, 384, 2, 1, 64),
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_pallas_attention_sweep(B, T, Hq, Hkv, D, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    out = flash_attention_op(q, k, v, causal=True, window=window,
+                             q_block=128, kv_block=128, interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True,
+                        window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_pallas_attention_bf16():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    out = flash_attention_op(q, k, v, interpret=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=3e-2, rtol=3e-2)
+    assert out.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("shape", [(2, 7, 7, 19), (128,), (3, 100), (4, 8, 24)])
+@pytest.mark.parametrize("L", [4, 8, 16])
+def test_pallas_quantize_sweep(shape, L):
+    x = jax.random.normal(KEY, shape)
+    centers = jnp.linspace(-3, 3, L)
+    i1, d1 = quantize_op(x, centers, interpret=True)
+    i2, d2 = quantize_ref(x, centers)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_allclose(d1, d2)
+
+
+@pytest.mark.parametrize("shape,d", [((3, 5, 256), 256), ((2, 128), 128),
+                                     ((1, 9, 384), 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_rmsnorm_sweep(shape, d, dtype):
+    x = jax.random.normal(KEY, shape).astype(dtype)
+    sc = (1.0 + 0.1 * jax.random.normal(KEY, (d,))).astype(dtype)
+    y1 = rmsnorm_op(x, sc, interpret=True)
+    y2 = rmsnorm_ref(x, sc)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(y1.astype(jnp.float32),
+                               y2.astype(jnp.float32), atol=tol, rtol=tol)
+    assert y1.dtype == dtype
+
+
+@pytest.mark.parametrize("C,k", [(24, 5), (24, 7), (8, 3)])
+def test_pallas_split_sweep(C, k):
+    x = jax.random.normal(KEY, (4, 6, C))
+    perm = tuple(int(i) for i in np.random.RandomState(0).permutation(C))
+    l1, r1 = split_op(x, perm=perm, k=k, interpret=True)
+    l2, r2 = split_ref(x, perm, k)
+    np.testing.assert_allclose(l1, l2)
+    np.testing.assert_allclose(r1, r2)
+    assert l1.shape[-1] == k and r1.shape[-1] == C - k

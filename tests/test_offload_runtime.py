@@ -1,0 +1,110 @@
+"""Offload runtime + device cost model + baselines (construct/train/cost)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.configs.base import AgileSpec
+from repro.core.agile import init_agile_params
+from repro.core.baselines import (
+    deepcod_cost,
+    deepcod_init,
+    deepcod_loss,
+    edge_only_cost,
+    mcunet_cost,
+    mcunet_init,
+    mcunet_macs,
+    spinn_cost,
+    spinn_init,
+    spinn_loss,
+)
+from repro.data.synthetic import ImageDatasetSpec, SyntheticImages
+from repro.serve.device_model import DeviceModel, mcu_memory_model
+from repro.serve.offload import (
+    energy_per_inference,
+    measure_payload,
+    remote_nn_macs,
+    run_offload_inference,
+)
+
+KEY = jax.random.PRNGKey(9)
+CFG = AgileNNConfig(image_size=16, remote_width=16, remote_blocks=2,
+                    reference_width=16, reference_blocks=2,
+                    agile=AgileSpec(enabled=True, extractor_channels=24, k=5,
+                                    rho=0.8, lam=0.3, ig_steps=2))
+
+
+def test_device_model_latency_monotonic_in_bandwidth():
+    fast = DeviceModel(link_bps=6e6)
+    slow = DeviceModel(link_bps=270e3)
+    assert slow.tx_time(1000) > fast.tx_time(1000)
+    assert fast.compute_time(1e6) == slow.compute_time(1e6)
+
+
+def test_offload_inference_cost_breakdown():
+    params = init_agile_params(CFG, KEY)
+    x = jax.random.normal(KEY, (4, 16, 16, 3))
+    preds, cost = run_offload_inference(CFG, params, x)
+    assert preds.shape == (4,)
+    d = cost.as_dict
+    assert d["payload_bytes"] > 0
+    assert d["end_to_end_ms"] > 0
+    assert d["local_macs"] > 0
+    e = energy_per_inference(CFG, cost)
+    assert e > 0
+
+
+def test_payload_smaller_than_raw_features():
+    params = init_agile_params(CFG, KEY)
+    x = jax.random.normal(KEY, (4, 16, 16, 3))
+    payload, idx = measure_payload(CFG, params, x)
+    raw_bytes = idx.size * 4  # float32 features would be 4 bytes each
+    assert payload < raw_bytes
+
+
+def test_mcunet_local_only_no_tx():
+    cost = mcunet_cost(CFG)
+    assert cost.tx_s == 0.0 and cost.payload_bytes == 0.0
+    assert cost.local_compute_s > 0
+    assert mcunet_macs(CFG) > 0
+
+
+def test_edge_only_no_local_compute():
+    x = np.random.RandomState(0).randn(2, 16, 16, 3).astype(np.float32)
+    cost = edge_only_cost(CFG, x, remote_macs=1e6)
+    assert cost.local_macs == 0.0
+    assert cost.payload_bytes > 0
+
+
+def test_deepcod_and_spinn_train_one_step():
+    data = SyntheticImages(ImageDatasetSpec(image_size=16, noise=0.3))
+    images, labels = data.batch(8, seed=0)
+    dp = deepcod_init(KEY, CFG)
+    (loss, metrics), grads = jax.value_and_grad(deepcod_loss, has_aux=True)(
+        dp, images, labels)
+    assert np.isfinite(float(loss))
+    cost = deepcod_cost(CFG, dp, images, remote_macs=remote_nn_macs(CFG, 4))
+    assert cost.payload_bytes > 0
+
+    sp = spinn_init(KEY, CFG)
+    (loss, metrics), grads = jax.value_and_grad(spinn_loss, has_aux=True)(
+        sp, images, labels)
+    assert np.isfinite(float(loss))
+    cost = spinn_cost(CFG, sp, images, remote_macs=remote_nn_macs(CFG, 4))
+    assert cost.local_macs > 0
+
+
+def test_mcu_memory_model():
+    mem = mcu_memory_model(100_000, 50_000)
+    assert mem["flash_bytes"] == 100_000
+    assert mem["sram_bytes"] == 50_000
+
+
+def test_agilenn_beats_mcunet_latency():
+    """The paper's headline: AgileNN end-to-end latency is far below
+    local-only inference on the same device model."""
+    params = init_agile_params(CFG, KEY)
+    x = jax.random.normal(KEY, (4, 16, 16, 3))
+    _, agile_cost = run_offload_inference(CFG, params, x)
+    local_cost = mcunet_cost(CFG, width=32, blocks=4)
+    assert agile_cost.local_compute_s < local_cost.local_compute_s

@@ -1,0 +1,73 @@
+"""Partition rules: model-axis placement, divisibility fallbacks, FSDP."""
+import re
+
+import pytest
+
+from repro.launch.partition import _RULES, _spec_for
+
+
+def spec(path, shape, model=16, fsdp=False, dsize=16):
+    return _spec_for(path, shape, model,
+                     fsdp_axes=("data",) if fsdp else None, fsdp_size=dsize)
+
+
+def test_embed_vocab_sharded_when_divisible():
+    s = spec("embed/table", (151936, 896))
+    assert s == ("model", None) or tuple(s) == ("model", None)
+
+
+def test_embed_fallback_to_dmodel_for_odd_vocab():
+    # internvl2: 151655 % 16 != 0 -> shard d_model instead
+    s = tuple(spec("embed/table", (151655, 896)))
+    assert s == (None, "model")
+
+
+def test_attention_col_and_row_parallel():
+    assert tuple(spec("blocks/0/attn/wq/w", (24, 896, 896))) == (None, None, "model")
+    assert tuple(spec("blocks/0/attn/wo/w", (24, 896, 896))) == (None, "model", None)
+
+
+def test_moe_expert_parallel_when_divisible():
+    # arctic: 128 experts / 16 shards
+    s = tuple(spec("blocks/0/moe/gate", (35, 128, 7168, 4864)))
+    assert s == (None, "model", None, None)
+
+
+def test_moe_tensor_parallel_fallback_small_expert_count():
+    # mixtral: 8 experts < 16 shards -> shard d_ff
+    s = tuple(spec("blocks/0/moe/gate", (32, 8, 4096, 14336)))
+    assert s == (None, None, None, "model")
+    s = tuple(spec("blocks/0/moe/down", (32, 8, 14336, 4096)))
+    assert s == (None, None, "model", None)
+
+
+def test_qwen_attention_head_fallback():
+    # qwen2-0.5b: 14 heads * 64 = 896 cols; 896 % 16 == 0 so col-parallel ok
+    s = tuple(spec("blocks/0/attn/wq/w", (24, 896, 896)))
+    assert "model" in s
+
+
+def _has_data(s):
+    return any(x in ("data", ("data",)) for x in s)
+
+
+def test_fsdp_adds_data_axis():
+    s = tuple(spec("blocks/0/ffn/gate/w", (32, 4096, 14336), fsdp=True))
+    assert s.count("model") == 1
+    assert _has_data(s)
+
+
+def test_fsdp_skips_small_tensors():
+    s = tuple(spec("blocks/0/norm/scale", (32, 896), fsdp=True))
+    assert not _has_data(s)
+
+
+def test_norms_replicated():
+    s = tuple(spec("blocks/0/norm/scale", (24, 896)))
+    assert all(x is None for x in s)
+
+
+def test_every_rule_pattern_is_valid_regex():
+    for pattern, candidates in _RULES:
+        re.compile(pattern)
+        assert all(c >= 1 for c in candidates)

@@ -72,10 +72,12 @@ def eval_accuracy(predict_fn, data, *, n_batches: int = 3,
 
 
 def timed_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    # jax.block_until_ready handles arbitrary pytrees (tuples of arrays,
+    # host-side lists), so async dispatch can't leak out of the timing
     for _ in range(warmup):
-        fn(*args)
+        jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6

@@ -6,10 +6,13 @@ table reads the dry-run JSON dumps if present.
 
   PYTHONPATH=src python -m benchmarks.run                 # everything
   PYTHONPATH=src python -m benchmarks.run --only fig16,tab2
+  PYTHONPATH=src python -m benchmarks.run --only kernels \
+      --json BENCH_kernels.json                           # perf baseline
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -19,6 +22,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
                          "kernels, roofline)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the collected rows as a JSON baseline")
     args = ap.parse_args(argv)
 
     from benchmarks.ablations import ABLATIONS
@@ -34,12 +39,16 @@ def main(argv=None) -> None:
     selected = list(suites) if not args.only else args.only.split(",")
     print("name,value,derived")
     failed = 0
+    collected = []
     for key in selected:
         if key not in suites:
+            failed += 1
             print(f"{key},ERROR,unknown suite", flush=True)
             continue
         try:
             for name, value, derived in suites[key]():
+                collected.append({"name": name, "value": value,
+                                  "derived": derived})
                 if isinstance(value, float):
                     value = f"{value:.6g}"
                 print(f"{name},{value},{derived}", flush=True)
@@ -47,6 +56,10 @@ def main(argv=None) -> None:
             failed += 1
             print(f"{key},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(limit=3, file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": selected, "rows": collected}, f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

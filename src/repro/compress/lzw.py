@@ -3,7 +3,10 @@
 Operates on byte sequences; used by the offload runtime to measure the
 actual transmitted payload size (Table 2 / Figure 21(c) reproductions).
 Pure Python — it runs on the host side of the serving engine, not inside
-jit.
+jit.  The encoder keys its dictionary on packed (prefix_code, byte) ints
+rather than concatenated byte strings, so each input byte is O(1) dict
+work with no string allocation; the variable-width stream size is a
+closed form of the code count.
 """
 from __future__ import annotations
 
@@ -11,23 +14,29 @@ import numpy as np
 
 
 def lzw_encode(data: bytes) -> list[int]:
-    """Classic LZW: returns a list of integer codes."""
+    """Classic LZW: returns a list of integer codes.
+
+    The table maps (prefix_code << 8) | next_byte -> code; single bytes
+    are implicitly codes 0..255.  Emitted codes are identical to the
+    textbook string-keyed formulation.
+    """
     if not data:
         return []
-    table = {bytes([i]): i for i in range(256)}
+    table: dict[int, int] = {}
     next_code = 256
-    out = []
-    w = bytes([data[0]])
+    out: list[int] = []
+    w = data[0]
     for b in data[1:]:
-        wb = w + bytes([b])
-        if wb in table:
-            w = wb
+        key = (w << 8) | b
+        nxt = table.get(key)
+        if nxt is not None:
+            w = nxt
         else:
-            out.append(table[w])
-            table[wb] = next_code
+            out.append(w)
+            table[key] = next_code
             next_code += 1
-            w = bytes([b])
-    out.append(table[w])
+            w = b
+    out.append(w)
     return out
 
 
@@ -55,17 +64,19 @@ def lzw_decode(codes: list[int]) -> bytes:
 def lzw_encoded_bytes(codes: list[int]) -> int:
     """Size of the code stream with variable-width packing (as the MCU
     implementation does): code i is emitted at the bit width needed for
-    the table size at that moment."""
-    if not codes:
+    the table size at that moment — i.e. bit_length(256 + i), never below
+    9.  Computed per contiguous width segment instead of per code."""
+    n = len(codes)
+    if n == 0:
         return 0
     bits = 0
-    table_size = 256
     width = 9
-    for _ in codes:
-        bits += width
-        table_size += 1
-        if table_size >= (1 << width):
-            width += 1
+    i = 0
+    while i < n:
+        hi = min(n, (1 << width) - 256)   # codes still emitted at `width`
+        bits += (hi - i) * width
+        i = hi
+        width += 1
     return (bits + 7) // 8
 
 
@@ -76,9 +87,27 @@ def compress_payload(data: bytes) -> tuple[int, list[int]]:
 
 
 def pack_indices(idx: np.ndarray, bits: int) -> bytes:
-    """Bit-pack quantization indices (B*H*W*C elements, `bits` bits each)."""
+    """Bit-pack quantization indices (H*W*C elements, `bits` bits each)."""
     idx = np.asarray(idx, dtype=np.uint8).ravel()
     if bits == 8:
         return idx.tobytes()
     bitstream = np.unpackbits(idx[:, None], axis=1, count=8)[:, 8 - bits:]
     return np.packbits(bitstream.ravel()).tobytes()
+
+
+def pack_indices_batch(idx: np.ndarray, bits: int) -> list[bytes]:
+    """Bit-pack a whole batch in one vectorized pass.
+
+    idx: (B, ...) index array.  Returns one bytes object per sample,
+    byte-identical to ``pack_indices(idx[b], bits)`` (each sample is
+    padded to its own byte boundary, matching the per-sample radio
+    framing)."""
+    idx = np.asarray(idx, dtype=np.uint8).reshape(idx.shape[0], -1)
+    if bits == 8:
+        return [row.tobytes() for row in idx]
+    # MSB-first bit expansion by shifts: skips the 8-wide unpackbits
+    # intermediate and its non-contiguous slice
+    shifts = np.arange(bits - 1, -1, -1, dtype=np.uint8)
+    bitstream = (idx[..., None] >> shifts) & 1
+    packed = np.packbits(bitstream.reshape(idx.shape[0], -1), axis=1)
+    return [row.tobytes() for row in packed]

@@ -18,6 +18,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compress.quantize import (
     dequantize,
@@ -28,7 +29,8 @@ from repro.compress.quantize import (
 from repro.configs.agilenn_cifar import AgileNNConfig
 from repro.core.combiner import alpha_value, combine_predictions, combiner_init
 from repro.core.skewness import combined_loss
-from repro.core.splitter import split_features
+from repro.core.splitter import merge_features, split_features
+from repro.kernels.offload_fused.ops import fused_offload
 from repro.core.xai import evaluate_importance
 from repro.models.cnn import (
     extractor_apply,
@@ -65,18 +67,41 @@ def extract_features(cfg: AgileNNConfig, params, images):
     return jnp.take(feats, params["mapping"], axis=-1)
 
 
+def _static_perm(mapping):
+    """The deployed permutation as a static tuple, or None when `mapping`
+    is a tracer (training: the fused online kernel is bypassed)."""
+    if isinstance(mapping, jax.core.Tracer):
+        return None
+    return tuple(int(p) for p in np.asarray(mapping))
+
+
 def agile_forward(cfg: AgileNNConfig, params, images, *, train: bool = True,
-                  quantize: bool = True, alpha_override=None):
-    """Full split pipeline.  Returns (combined_logits, internals dict)."""
-    feats = extract_features(cfg, params, images)
-    f_local, f_remote = split_features(feats, cfg.agile.k)
-    if quantize:
-        if train:
-            f_remote_q = quantize_ste(params["quant"], f_remote)
-        else:
-            f_remote_q = dequantize(params["quant"], hard_indices(params["quant"], f_remote))
+                  quantize: bool = True, alpha_override=None,
+                  use_fused: bool = True):
+    """Full split pipeline.  Returns (combined_logits, internals dict).
+
+    The deployment path (train=False, quantize=True) runs the fused
+    one-pass permute->split->quantize offload kernel whenever the mapping
+    is concrete; training keeps the differentiable two-pass composition.
+    """
+    perm = (_static_perm(params["mapping"])
+            if use_fused and not train and quantize else None)
+    if perm is not None:
+        raw = extractor_apply(params["extractor"], images)
+        f_local, f_remote, _, f_remote_q = fused_offload(
+            raw, params["quant"]["centers"], perm=perm, k=cfg.agile.k)
+        feats = merge_features(f_local, f_remote)
     else:
-        f_remote_q = f_remote
+        feats = extract_features(cfg, params, images)
+        f_local, f_remote = split_features(feats, cfg.agile.k)
+        if quantize:
+            if train:
+                f_remote_q = quantize_ste(params["quant"], f_remote)
+            else:
+                f_remote_q = dequantize(params["quant"],
+                                        hard_indices(params["quant"], f_remote))
+        else:
+            f_remote_q = f_remote
     local_logits = local_nn_apply(params["local"], f_local)
     remote_logits = remote_nn_apply(params["remote"], f_remote_q)
     logits = combine_predictions(params["combiner"], local_logits, remote_logits,
@@ -157,9 +182,19 @@ def agile_predict(cfg: AgileNNConfig, params, images, *, alpha_override=None):
     return logits, internals
 
 
-def offload_payload_arrays(cfg: AgileNNConfig, params, images):
+def offload_payload_arrays(cfg: AgileNNConfig, params, images, *,
+                           use_fused: bool = True):
     """What the device actually transmits: hard quantization indices of the
-    less-important channels (to be bit-packed + LZW'd by the runtime)."""
+    less-important channels (to be bit-packed + LZW'd by the runtime).
+
+    use_fused=False forces the seed two-pass path (kept as the parity
+    oracle for the fused kernel)."""
+    perm = _static_perm(params["mapping"]) if use_fused else None
+    if perm is not None:
+        raw = extractor_apply(params["extractor"], images)
+        _, _, idx, _ = fused_offload(raw, params["quant"]["centers"],
+                                     perm=perm, k=cfg.agile.k)
+        return idx
     feats = extract_features(cfg, params, images)
     _, f_remote = split_features(feats, cfg.agile.k)
     return hard_indices(params["quant"], f_remote)

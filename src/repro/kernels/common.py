@@ -1,0 +1,44 @@
+"""Shared helpers for the Pallas kernels and their jnp fallbacks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nearest_center_scan(xf, centers_f32):
+    """Unrolled nearest-center search (the quantization inner loop).
+
+    xf: float32 array (any shape); centers_f32: 1-D float32 codebook with
+    static length L (small: L <= 16, so the loop unrolls into VREG ops).
+    Returns (indices int32, center values float32); ties resolve to the
+    lowest index, bit-identical to argmin over squared distances.
+    """
+    best_d = jnp.full(xf.shape, jnp.inf, jnp.float32)
+    best_i = jnp.zeros(xf.shape, jnp.int32)
+    best_v = jnp.zeros(xf.shape, jnp.float32)
+    for c in range(centers_f32.shape[0]):
+        cv = centers_f32[c]
+        d = (xf - cv) ** 2
+        take = d < best_d
+        best_d = jnp.where(take, d, best_d)
+        best_i = jnp.where(take, c, best_i)
+        best_v = jnp.where(take, cv, best_v)
+    return best_i, best_v
+
+
+def pad_rows_to_grid(x, block_rows: int):
+    """Zero-pad the leading (row) axis to a whole number of tiles.
+
+    block_rows is an upper bound: once the tile count is fixed, the tile
+    size is rebalanced to the sublane-aligned minimum that still covers N,
+    so row counts just above a tile boundary (e.g. 257 with 256-row tiles)
+    don't pay for a nearly-empty padding tile.  Returns (x_padded,
+    n_tiles, block_rows); callers slice outputs back to x.shape[0] rows.
+    """
+    N = x.shape[0]
+    n_tiles = -(-N // block_rows)
+    per_tile = -(-N // n_tiles)
+    block_rows = -(-per_tile // 8) * 8
+    N_p = n_tiles * block_rows
+    if N_p != N:
+        x = jnp.zeros((N_p,) + x.shape[1:], x.dtype).at[:N].set(x)
+    return x, n_tiles, block_rows

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused AgileNN online offload pass.
+
+One VMEM pass over (rows, C) feature tiles performs the whole device-side
+offload transform:
+
+  channel-permute (static gather, fixed at training time)
+    -> (local k, remote C-k) split
+    -> nearest-center quantization of the remote half
+       (int32 index + dequantized value)
+
+This replaces the seed's slice-and-concat permute kernel plus a second
+full quantization pass: the feature stream is read from HBM exactly once,
+and the codebook (L <= 16 centers) is broadcast into VREGs.  Row counts
+that are not a multiple of ``block_rows`` are zero-padded to the grid and
+sliced back, so arbitrary batch x spatial shapes are accepted.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import nearest_center_scan, pad_rows_to_grid
+
+
+def _fused_kernel(x_ref, centers_ref, local_ref, remote_ref, idx_ref,
+                  deq_ref, *, perm: tuple, k: int):
+    x = x_ref[...]                                       # (rows, C)
+    cols = [x[:, p:p + 1] for p in perm]                 # static gather
+    y = jnp.concatenate(cols, axis=1)
+    local_ref[...] = y[:, :k]
+    r = y[:, k:]
+    remote_ref[...] = r
+    centers = centers_ref[...].astype(jnp.float32)       # (1, L)
+    best_i, best_v = nearest_center_scan(r.astype(jnp.float32),
+                                         centers.reshape(-1))
+    idx_ref[...] = best_i
+    deq_ref[...] = best_v.astype(deq_ref.dtype)
+
+
+def offload_fused_tpu(x, centers, *, perm, k: int, block_rows: int = 256,
+                      interpret: bool = False):
+    """x: (N, C); centers: (L,); perm: static python tuple of ints.
+
+    Returns (local (N, k), remote (N, C-k), indices int32, dequantized),
+    all in one pass.  N may be any positive row count.
+    """
+    N, C = x.shape
+    L = centers.shape[0]
+    x, grid, block_rows = pad_rows_to_grid(x, block_rows)
+    N_p = grid * block_rows
+    kernel = functools.partial(
+        _fused_kernel, perm=tuple(int(p) for p in perm), k=k)
+    row_spec = lambda w: pl.BlockSpec((block_rows, w), lambda i: (i, 0),
+                                      memory_space=pltpu.VMEM)
+    local, remote, idx, deq = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            row_spec(C),
+            pl.BlockSpec((1, L), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[row_spec(k), row_spec(C - k), row_spec(C - k),
+                   row_spec(C - k)],
+        out_shape=[
+            jax.ShapeDtypeStruct((N_p, k), x.dtype),
+            jax.ShapeDtypeStruct((N_p, C - k), x.dtype),
+            jax.ShapeDtypeStruct((N_p, C - k), jnp.int32),
+            jax.ShapeDtypeStruct((N_p, C - k), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, centers.reshape(1, L))
+    return local[:N], remote[:N], idx[:N], deq[:N]

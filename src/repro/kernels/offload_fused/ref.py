@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused permute->split->quantize kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def offload_fused_ref(x, centers, perm, k: int):
+    """x: (..., C) -> (local, remote, indices, dequantized)."""
+    y = jnp.take(x, jnp.asarray(perm), axis=-1)
+    local, remote = y[..., :k], y[..., k:]
+    d2 = (remote[..., None].astype(jnp.float32)
+          - centers.astype(jnp.float32)) ** 2
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    deq = jnp.take(centers, idx).astype(x.dtype)
+    return local, remote, idx, deq

@@ -8,28 +8,19 @@ is tiled through VMEM in (rows, 128) blocks.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import nearest_center_scan, pad_rows_to_grid
 
-def _quant_kernel(x_ref, centers_ref, idx_ref, deq_ref, *, n_centers: int):
+
+def _quant_kernel(x_ref, centers_ref, idx_ref, deq_ref):
     x = x_ref[...].astype(jnp.float32)                     # (rows, 128)
     centers = centers_ref[...].astype(jnp.float32)         # (1, n_centers)
-    best_d = jnp.full(x.shape, jnp.inf, jnp.float32)
-    best_i = jnp.zeros(x.shape, jnp.int32)
-    best_v = jnp.zeros(x.shape, jnp.float32)
-    for c in range(n_centers):                              # unrolled: L small
-        cv = centers[0, c]
-        d = (x - cv) ** 2
-        take = d < best_d
-        best_d = jnp.where(take, d, best_d)
-        best_i = jnp.where(take, c, best_i)
-        best_v = jnp.where(take, cv, best_v)
-    idx_ref[...] = best_i.astype(jnp.int32)
+    best_i, best_v = nearest_center_scan(x, centers.reshape(-1))
+    idx_ref[...] = best_i
     deq_ref[...] = best_v.astype(deq_ref.dtype)
 
 
@@ -37,16 +28,16 @@ def quantize_tpu(x, centers, *, block_rows: int = 256, interpret: bool = False):
     """x: (N, 128k) 2D feature stream; centers: (L,).
 
     Returns (indices int32, dequantized x.dtype), same shape as x.
+    N may be any positive row count (zero-padded to the tile grid).
     """
     N, W = x.shape
     assert W % 128 == 0, W
-    assert N % block_rows == 0, (N, block_rows)
+    x, n_tiles, block_rows = pad_rows_to_grid(x, block_rows)
+    N_p = n_tiles * block_rows
     L = centers.shape[0]
-    grid = (N // block_rows,)
-    kernel = functools.partial(_quant_kernel, n_centers=L)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    idx, deq = pl.pallas_call(
+        _quant_kernel,
+        grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec((block_rows, W), lambda i: (i, 0),
                          memory_space=pltpu.VMEM),
@@ -59,8 +50,9 @@ def quantize_tpu(x, centers, *, block_rows: int = 256, interpret: bool = False):
                          memory_space=pltpu.VMEM),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N, W), jnp.int32),
-            jax.ShapeDtypeStruct((N, W), x.dtype),
+            jax.ShapeDtypeStruct((N_p, W), jnp.int32),
+            jax.ShapeDtypeStruct((N_p, W), x.dtype),
         ],
         interpret=interpret,
     )(x, centers.reshape(1, L))
+    return idx[:N], deq[:N]

@@ -14,13 +14,13 @@ def quantize_op(x, centers, *, interpret: bool = True):
     """x: any shape; centers: (L,).  Returns (indices, dequantized)."""
     shape = x.shape
     n = x.size
-    # pack into (rows, 128) with padding
+    # pack into (rows, 128) lanes with padding; row padding to the tile
+    # grid is handled inside the kernel
     w = 128
     rows = -(-n // w)
-    rows_p = -(-rows // 8) * 8
-    flat = jnp.zeros((rows_p * w,), x.dtype).at[:n].set(x.reshape(-1))
-    x2 = flat.reshape(rows_p, w)
-    idx2, deq2 = quantize_tpu(x2, centers, block_rows=rows_p, interpret=interpret)
+    flat = jnp.zeros((rows * w,), x.dtype).at[:n].set(x.reshape(-1))
+    x2 = flat.reshape(rows, w)
+    idx2, deq2 = quantize_tpu(x2, centers, interpret=interpret)
     idx = idx2.reshape(-1)[:n].reshape(shape)
     deq = deq2.reshape(-1)[:n].reshape(shape)
     return idx, deq

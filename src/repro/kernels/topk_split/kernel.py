@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import pad_rows_to_grid
+
 
 def _permute_kernel(x_ref, o_ref, *, perm: tuple):
     x = x_ref[...]                                       # (rows, C)
@@ -25,17 +27,23 @@ def _permute_kernel(x_ref, o_ref, *, perm: tuple):
 
 def channel_permute_tpu(x, perm, *, block_rows: int = 256,
                         interpret: bool = False):
-    """x: (N, C); perm: static python tuple of ints."""
+    """x: (N, C); perm: static python tuple of ints.
+
+    N may be any positive row count: the grid is zero-padded to a whole
+    number of ``block_rows`` tiles and the result sliced back.
+    """
     N, C = x.shape
-    assert N % block_rows == 0
+    x, grid, block_rows = pad_rows_to_grid(x, block_rows)
+    N_p = grid * block_rows
     kernel = functools.partial(_permute_kernel, perm=tuple(int(p) for p in perm))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(N // block_rows,),
+        grid=(grid,),
         in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0),
                                memory_space=pltpu.VMEM)],
         out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0),
                                memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((N, C), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((N_p, C), x.dtype),
         interpret=interpret,
     )(x)
+    return out[:N]

@@ -15,8 +15,6 @@ def split_op(x, *, perm: tuple, k: int, interpret: bool = True):
     shape = x.shape
     C = shape[-1]
     n = x.size // C
-    n_p = -(-n // 8) * 8
-    x2 = jnp.zeros((n_p, C), x.dtype).at[:n].set(x.reshape(n, C))
-    y = channel_permute_tpu(x2, perm, block_rows=n_p, interpret=interpret)
-    y = y[:n].reshape(shape)
+    y = channel_permute_tpu(x.reshape(n, C), perm, interpret=interpret)
+    y = y.reshape(shape)
     return y[..., :k], y[..., k:]

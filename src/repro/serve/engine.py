@@ -1,14 +1,18 @@
-"""Batched serving engine: request queue -> prefill -> stepwise decode.
+"""Batched serving engine: request queue -> prefill -> sync-free decode.
 
 A deliberately small, dependency-free engine for the Remote-NN role:
 requests with equal-length prompts are grouped into one prefill; decoding
-proceeds in lockstep with per-request stop handling (static batch — the
-dry-run decode shapes correspond to one engine step).  Greedy or
+runs entirely on device as a single `jax.lax.while_loop` — sampling,
+EOS/done masking, and per-request length limits are all in-graph, and the
+KV cache is donated to the loop (on TPU).  One `generate` call therefore issues
+O(1) host transfers (prefill dispatch, loop dispatch, one final copy of
+the token buffer) instead of O(max_new_tokens) round-trips.  Greedy or
 temperature sampling.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
@@ -34,6 +38,52 @@ class Completion:
     steps: int
 
 
+def _decode_loop(cfg: ArchConfig, params, logits0, cache, cache_len, key,
+                 eos_ids, max_lens, max_new, temperature, *, buf_len: int,
+                 greedy: bool):
+    """Whole decode phase as one device program.
+
+    Samples the first token from the prefill logits, then runs a
+    while_loop of decode_step + sample + done-masking.  max_new is a
+    traced loop bound (no recompile across request budgets); only the
+    batch/cache shapes and the greedy flag shape the program.  Returns
+    (token buffer (B, buf_len), per-request lengths, steps executed).
+    """
+    B = logits0.shape[0]
+
+    def sample(logits, key):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+        key, sub = jax.random.split(key)
+        t = jax.random.categorical(sub, logits / temperature, axis=-1)
+        return t.astype(jnp.int32), key
+
+    tok0, key = sample(logits0, key)
+    buf = jnp.zeros((B, buf_len), jnp.int32).at[:, 0].set(tok0)
+    lengths = jnp.ones((B,), jnp.int32)
+    done = (tok0 == eos_ids) | (lengths >= max_lens)
+    state = (jnp.zeros((), jnp.int32), buf, lengths, done, tok0[:, None],
+             cache, jnp.asarray(cache_len, jnp.int32), key)
+
+    def cond(state):
+        step, _, _, done, _, _, _, _ = state
+        return (step < max_new - 1) & ~jnp.all(done)
+
+    def body(state):
+        step, buf, lengths, done, tok, cache, cl, key = state
+        logits, cache = bb.decode_step(cfg, params, tok, cache, cl)
+        t, key = sample(logits, key)
+        active = ~done
+        pos = jnp.where(active, lengths, buf_len)      # OOB rows -> dropped
+        buf = buf.at[jnp.arange(B), pos].set(t, mode="drop")
+        lengths = lengths + active.astype(jnp.int32)
+        done = done | (active & ((t == eos_ids) | (lengths >= max_lens)))
+        return (step + 1, buf, lengths, done, t[:, None], cache, cl + 1, key)
+
+    step, buf, lengths, done, _, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return buf, lengths, step + 1
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
                  seed: int = 0):
@@ -41,14 +91,13 @@ class ServeEngine:
         self.params = params
         self.max_len = max_len
         self._key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(
-            lambda p, t, c, n: bb.decode_step(cfg, p, t, c, n))
-
-    def _sample(self, logits, temperature: float):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        # cache is donated where the backend supports it (TPU): the
+        # prefill cache buffers are reused in place by the loop instead
+        # of being copied per step
+        donate = (2,) if jax.default_backend() == "tpu" else ()
+        self._loop = jax.jit(partial(_decode_loop, cfg),
+                             static_argnames=("buf_len", "greedy"),
+                             donate_argnums=donate)
 
     def generate(self, requests: list[Request]) -> list[Completion]:
         """All prompts must share one length (the engine's batch grouping
@@ -57,7 +106,6 @@ class ServeEngine:
         T = len(requests[0].tokens)
         assert all(len(r.tokens) == T for r in requests), \
             "group requests by prompt length"
-        B = len(requests)
         batch = {"tokens": jnp.asarray(
             np.stack([r.tokens for r in requests]), jnp.int32)}
         ex = requests[0].extras or {}
@@ -67,25 +115,19 @@ class ServeEngine:
         logits, cache, total_T = bb.prefill(
             self.cfg, self.params, batch, max_len=self.max_len)
         max_new = max(r.max_new_tokens for r in requests)
-        temps = requests[0].temperature
-        tok = self._sample(logits, temps)[:, None].astype(jnp.int32)
+        assert max_new <= self.max_len, \
+            f"max_new_tokens {max_new} exceeds engine max_len {self.max_len}"
+        temp = requests[0].temperature
+        self._key, sub = jax.random.split(self._key)
+        eos_ids = jnp.asarray([r.eos_id for r in requests], jnp.int32)
+        max_lens = jnp.asarray([r.max_new_tokens for r in requests], jnp.int32)
 
-        out = [[int(tok[b, 0])] for b in range(B)]
-        done = np.zeros(B, bool)
-        cl = total_T
-        steps = 1
-        for _ in range(max_new - 1):
-            if done.all():
-                break
-            logits, cache = self._decode(self.params, tok, cache, cl)
-            tok = self._sample(logits, temps)[:, None].astype(jnp.int32)
-            cl += 1
-            steps += 1
-            t_np = np.asarray(tok[:, 0])
-            for b, r in enumerate(requests):
-                if done[b]:
-                    continue
-                out[b].append(int(t_np[b]))
-                if t_np[b] == r.eos_id or len(out[b]) >= r.max_new_tokens:
-                    done[b] = True
-        return [Completion(np.asarray(o, np.int32), steps) for o in out]
+        buf, lengths, steps = self._loop(
+            self.params, logits, cache, total_T, sub, eos_ids, max_lens,
+            jnp.int32(max_new), jnp.float32(max(temp, 1e-6)),
+            buf_len=self.max_len, greedy=temp <= 0.0)
+        # the single device->host transfer of the decode phase
+        buf, lengths, steps = (np.asarray(buf), np.asarray(lengths),
+                               int(steps))
+        return [Completion(buf[b, :lengths[b]].astype(np.int32), steps)
+                for b in range(len(requests))]

@@ -1,15 +1,23 @@
-"""AgileNN inference runtime (paper Figure 5, online path).
+"""AgileNN inference runtime (paper Figure 5, fused online path).
 
 Given trained AgileNN parameters, runs the full deployment pipeline for a
 batch of inputs and accounts every cost with the device model:
 
-  device:  extractor -> split -> Local NN        (MACs -> t_compute)
-           quantize remote channels -> bit-pack -> LZW  (payload bytes)
-  radio:   payload / bandwidth                   (t_tx)
-  server:  dequantize -> Remote NN -> logits     (t_server)
-  device:  alpha-combine                          (negligible)
+  device:  extractor
+           fused offload pass (one kernel over the feature stream:
+             channel-permute -> (local, remote) split ->
+             nearest-center quantization indices + dequantized values)
+           Local NN on the local half               (MACs -> t_compute)
+           vectorized bit-pack (whole batch) -> per-sample LZW  (bytes)
+  radio:   payload / bandwidth                     (t_tx)
+  server:  Remote NN on the dequantized half       (t_server)
+  device:  alpha-combine                           (negligible)
 
-`run_offload_inference` returns predictions plus an InferenceCost.
+The fused pass is `repro.kernels.offload_fused` (Pallas on TPU, fused jnp
+elsewhere); `measure_payload` makes exactly one device->host transfer per
+batch and packs all samples in one numpy pass before the per-sample LZW
+size accounting.  `run_offload_inference` returns predictions plus an
+InferenceCost.
 """
 from __future__ import annotations
 
@@ -17,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.compress.lzw import compress_payload, pack_indices
+from repro.compress.lzw import compress_payload, pack_indices_batch
 from repro.compress.quantize import dequantize, quantization_bits
 from repro.configs.agilenn_cifar import AgileNNConfig
 from repro.core.agile import agile_forward, offload_payload_arrays
@@ -44,13 +52,18 @@ def remote_nn_macs(cfg: AgileNNConfig, feat_hw: int) -> int:
     return total
 
 
-def measure_payload(cfg: AgileNNConfig, params, images) -> tuple[int, np.ndarray]:
-    """Exact transmitted bytes: quantize -> bit-pack -> LZW, per batch."""
-    idx = np.asarray(offload_payload_arrays(cfg, params, images))
+def measure_payload(cfg: AgileNNConfig, params, images, *,
+                    use_fused: bool = True) -> tuple[int, np.ndarray]:
+    """Exact transmitted bytes: fused quantize -> batched bit-pack -> LZW.
+
+    One device->host transfer and one vectorized packing pass for the
+    whole batch; the LZW size is still accounted per sample (each sample
+    is an independent radio payload)."""
+    idx = np.asarray(offload_payload_arrays(cfg, params, images,
+                                            use_fused=use_fused))
     bits = quantization_bits(params["quant"]["centers"].shape[0])
     total = 0
-    for b in range(idx.shape[0]):
-        packed = pack_indices(idx[b], bits)
+    for packed in pack_indices_batch(idx, bits):
         nbytes, _ = compress_payload(packed)
         total += nbytes
     return total, idx

@@ -1,0 +1,176 @@
+"""Fused online offload path: kernel-vs-ref equality, fused-vs-seed
+bit-exact parity, byte-identical payload accounting, and the sync-free
+engine decode loop structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress.lzw import (
+    compress_payload,
+    lzw_encode,
+    lzw_encoded_bytes,
+    pack_indices,
+    pack_indices_batch,
+)
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.configs.base import AgileSpec
+from repro.core.agile import (
+    agile_forward,
+    init_agile_params,
+    offload_payload_arrays,
+)
+from repro.kernels.offload_fused.ops import fused_offload_jnp, fused_offload_op
+from repro.kernels.offload_fused.ref import offload_fused_ref
+from repro.kernels.quantize.ops import quantize_op
+from repro.kernels.quantize.ref import quantize_ref
+from repro.kernels.topk_split.ops import split_op
+from repro.kernels.topk_split.ref import split_ref
+from repro.serve.offload import measure_payload
+
+KEY = jax.random.PRNGKey(7)
+CFG = AgileNNConfig(image_size=16, remote_width=16, remote_blocks=2,
+                    reference_width=16, reference_blocks=2,
+                    agile=AgileSpec(enabled=True, extractor_channels=24, k=5,
+                                    rho=0.8, lam=0.3, ig_steps=2))
+
+
+def _params(shuffled_mapping: bool = True):
+    params = init_agile_params(CFG, KEY)
+    if shuffled_mapping:
+        params["mapping"] = jnp.asarray(
+            np.random.RandomState(3).permutation(CFG.extractor_channels),
+            jnp.int32)
+    return params
+
+
+# ------------------------------------------------------------ kernel vs ref
+
+
+@pytest.mark.parametrize("shape,C,k", [((4, 6, 24), 24, 5), ((3, 24), 24, 7),
+                                       ((7, 3, 3, 8), 8, 3)])
+@pytest.mark.parametrize("L", [4, 8, 16])
+def test_fused_kernel_matches_ref(shape, C, k, L):
+    x = jax.random.normal(KEY, shape)
+    perm = tuple(int(i) for i in np.random.RandomState(0).permutation(C))
+    centers = jnp.linspace(-3, 3, L)
+    ref = offload_fused_ref(x, centers, perm, k)
+    pal = fused_offload_op(x, centers, perm=perm, k=k, interpret=True)
+    fb = fused_offload_jnp(x, centers, perm=perm, k=k)
+    for r, p, f in zip(ref, pal, fb):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(f))
+
+
+@pytest.mark.parametrize("rows", [1, 7, 8, 13, 250, 257])
+def test_kernels_accept_ragged_row_counts(rows):
+    """The lifted N % block_rows asserts: any row count works."""
+    C, k, L = 16, 5, 8
+    x = jax.random.normal(KEY, (rows, C))
+    perm = tuple(int(i) for i in np.random.RandomState(1).permutation(C))
+    centers = jnp.linspace(-2, 2, L)
+
+    l1, r1 = split_op(x, perm=perm, k=k, interpret=True)
+    l2, r2 = split_ref(x, perm, k)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+    i1, d1 = quantize_op(x, centers, interpret=True)
+    i2, d2 = quantize_ref(x, centers)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+    fused = fused_offload_op(x, centers, perm=perm, k=k, interpret=True)
+    ref = offload_fused_ref(x, centers, perm, k)
+    for f, r in zip(fused, ref):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(r))
+
+
+# -------------------------------------------------- fused vs seed two-pass
+
+
+def test_offload_payload_arrays_fused_bitexact():
+    params = _params()
+    x = jax.random.normal(KEY, (4, 16, 16, 3))
+    fused = np.asarray(offload_payload_arrays(CFG, params, x, use_fused=True))
+    seed = np.asarray(offload_payload_arrays(CFG, params, x, use_fused=False))
+    np.testing.assert_array_equal(fused, seed)
+
+
+def test_agile_forward_fused_bitexact():
+    params = _params()
+    x = jax.random.normal(KEY, (4, 16, 16, 3))
+    l1, int1 = agile_forward(CFG, params, x, train=False)
+    l2, int2 = agile_forward(CFG, params, x, train=False, use_fused=False)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_array_equal(np.asarray(int1["features"]),
+                                  np.asarray(int2["features"]))
+
+
+def test_measure_payload_bytes_identical_to_seed_path():
+    """measure_payload (fused + batched pack) == seed per-sample pipeline."""
+    params = _params()
+    x = jax.random.normal(KEY, (5, 16, 16, 3))
+    total, idx = measure_payload(CFG, params, x)
+
+    seed_idx = np.asarray(offload_payload_arrays(CFG, params, x,
+                                                 use_fused=False))
+    bits = 3                                      # 8-center codebook
+    seed_total = 0
+    for b in range(seed_idx.shape[0]):
+        nbytes, _ = compress_payload(pack_indices(seed_idx[b], bits))
+        seed_total += nbytes
+    assert total == seed_total
+    np.testing.assert_array_equal(idx, seed_idx)
+
+
+# --------------------------------------------------------- payload codecs
+
+
+def test_fast_lzw_matches_string_keyed_reference():
+    """Dict-of-int encoder == textbook bytes-concatenation LZW."""
+    def lzw_encode_naive(data):
+        if not data:
+            return []
+        table = {bytes([i]): i for i in range(256)}
+        next_code, out, w = 256, [], bytes([data[0]])
+        for b in data[1:]:
+            wb = w + bytes([b])
+            if wb in table:
+                w = wb
+            else:
+                out.append(table[w])
+                table[wb] = next_code
+                next_code += 1
+                w = bytes([b])
+        out.append(table[w])
+        return out
+
+    rs = np.random.RandomState(2)
+    for n in [0, 1, 5, 300, 3000]:
+        data = rs.randint(0, 8, n, dtype=np.uint8).tobytes()
+        assert lzw_encode(data) == lzw_encode_naive(data)
+
+
+def test_lzw_encoded_bytes_closed_form():
+    """Segment closed form == the seed per-code width walk."""
+    def enc_bytes_naive(n_codes):
+        bits, table_size, width = 0, 256, 9
+        for _ in range(n_codes):
+            bits += width
+            table_size += 1
+            if table_size >= (1 << width):
+                width += 1
+        return (bits + 7) // 8
+
+    for n in [0, 1, 255, 256, 257, 768, 769, 5000]:
+        assert lzw_encoded_bytes(list(range(n))) == enc_bytes_naive(n)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+def test_pack_indices_batch_matches_per_sample(bits):
+    idx = np.random.RandomState(5).randint(0, 2 ** bits, size=(6, 7, 7, 19))
+    batch = pack_indices_batch(idx, bits)
+    assert len(batch) == 6
+    for b in range(6):
+        assert batch[b] == pack_indices(idx[b], bits)

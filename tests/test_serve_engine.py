@@ -37,6 +37,56 @@ def test_generate_greedy_deterministic():
     np.testing.assert_array_equal(a.tokens, b.tokens)
 
 
+def test_decode_loop_is_single_device_program():
+    """The decode phase lowers to one while_loop: no per-token host
+    round-trip of logits/tokens inside generation."""
+    from functools import partial
+    import jax.numpy as jnp
+    from repro.serve.engine import _decode_loop
+
+    cfg, eng = _engine()
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    logits, cache, total_T = bb.prefill(cfg, eng.params, batch, max_len=64)
+    jaxpr = jax.make_jaxpr(
+        partial(_decode_loop, cfg, buf_len=64, greedy=True))(
+        eng.params, logits, cache, total_T, KEY,
+        jnp.full((2,), -1, jnp.int32), jnp.full((2,), 6, jnp.int32),
+        jnp.int32(6), jnp.float32(1.0))
+    prims = {eqn.primitive.name for eqn in jaxpr.eqns}
+    assert "while" in prims
+
+
+def test_generate_respects_per_request_lengths():
+    cfg, eng = _engine()
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab, 8)
+    outs = eng.generate([Request(tokens=prompt, max_new_tokens=3),
+                         Request(tokens=prompt, max_new_tokens=6)])
+    assert len(outs[0].tokens) == 3
+    assert len(outs[1].tokens) == 6
+    # a 1-token budget holds even inside a larger batch, and an EOS hit
+    # on the very first sampled token stops that request immediately
+    outs = eng.generate([Request(tokens=prompt, max_new_tokens=1),
+                         Request(tokens=prompt, max_new_tokens=6)])
+    assert len(outs[0].tokens) == 1
+    eos = int(outs[1].tokens[0])
+    outs = eng.generate([Request(tokens=prompt, max_new_tokens=6, eos_id=eos),
+                         Request(tokens=prompt, max_new_tokens=6)])
+    assert outs[0].tokens.tolist() == [eos]
+    assert len(outs[1].tokens) == 6
+
+
+def test_generate_varied_budgets_do_not_recompile():
+    """max_new is a traced loop bound: distinct per-call budgets reuse
+    one compiled decode program."""
+    cfg, eng = _engine()
+    rng = np.random.RandomState(4)
+    prompt = rng.randint(0, cfg.vocab, 8)
+    for n in (3, 5, 7):
+        eng.generate([Request(tokens=prompt, max_new_tokens=n)])
+    assert eng._loop._cache_size() == 1
+
+
 def test_generate_matches_manual_decode_loop():
     """Engine greedy output == hand-rolled prefill+decode loop."""
     cfg, eng = _engine()

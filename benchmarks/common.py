@@ -11,6 +11,9 @@ import numpy as np
 from repro.configs.agilenn_cifar import AgileNNConfig
 from repro.configs.base import AgileSpec
 
+# set by benchmarks.run --smoke: suites shrink their workloads (CI-sized)
+SMOKE = False
+
 QUICK_CFG = AgileNNConfig(image_size=16, remote_width=24, remote_blocks=2,
                           reference_width=32, reference_blocks=3,
                           agile=AgileSpec(enabled=True, extractor_channels=24,
@@ -74,6 +77,9 @@ def eval_accuracy(predict_fn, data, *, n_batches: int = 3,
 def timed_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     # jax.block_until_ready handles arbitrary pytrees (tuples of arrays,
     # host-side lists), so async dispatch can't leak out of the timing
+    if SMOKE:            # CI-sized: one warm call, two timed (CI boxes are
+        iters, warmup = min(iters, 2), 1   # too noisy for tight timings)
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.time()

@@ -6,8 +6,9 @@ table reads the dry-run JSON dumps if present.
 
   PYTHONPATH=src python -m benchmarks.run                 # everything
   PYTHONPATH=src python -m benchmarks.run --only fig16,tab2
-  PYTHONPATH=src python -m benchmarks.run --only kernels \
+  PYTHONPATH=src python -m benchmarks.run --only kernels,serve \
       --json BENCH_kernels.json                           # perf baseline
+  PYTHONPATH=src python -m benchmarks.run --json B.json --smoke   # CI
 """
 from __future__ import annotations
 
@@ -21,22 +22,36 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
-                         "kernels, roofline)")
+                         "kernels, serve, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: cheap suites only (kernels, serve) "
+                         "with shrunk workloads")
     args = ap.parse_args(argv)
+
+    import benchmarks.common
+    if args.smoke:
+        benchmarks.common.SMOKE = True
 
     from benchmarks.ablations import ABLATIONS
     from benchmarks.kernel_micro import kernel_micro_rows
     from benchmarks.paper_figures import ALL_FIGURES
     from benchmarks.roofline_table import roofline_rows
+    from benchmarks.serve_steady import serve_steady_rows
 
     suites = dict(ALL_FIGURES)
     suites.update(ABLATIONS)
     suites["kernels"] = kernel_micro_rows
+    suites["serve"] = serve_steady_rows
     suites["roofline"] = roofline_rows
 
-    selected = list(suites) if not args.only else args.only.split(",")
+    if args.only:
+        selected = args.only.split(",")
+    elif args.smoke:
+        selected = ["kernels", "serve"]
+    else:
+        selected = list(suites)
     print("name,value,derived")
     failed = 0
     collected = []

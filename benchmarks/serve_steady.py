@@ -1,0 +1,83 @@
+"""Steady-state serving benchmark: a mixed-length Poisson request queue
+through the continuous-batching scheduler.
+
+Requests with prompt lengths drawn from {8, 16, 32} arrive as a Poisson
+process interleaved with scheduler steps (new arrivals are submitted
+between decode segments, the way a serving frontend would).  The first
+drain pays all compiles (one prefill per bucket, one inject, one chunk
+program); the timed drain measures steady-state decode throughput and
+feeds the ``serve.tokens_per_s`` row of BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import benchmarks.common as common
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _drain_with_poisson_arrivals(sched, reqs, rng, rate: float) -> float:
+    """Submit `reqs` in Poisson(rate)-sized batches between scheduler
+    steps; returns wall seconds for the full drain."""
+    pending = list(reqs)
+    t0 = time.time()
+    while pending or sched._queue or any(
+            r is not None for r in sched._slot_rid):
+        k = min(len(pending), int(rng.poisson(rate)))
+        sent, pending = pending[:k], pending[k:]
+        for r in sent:
+            sched.submit(r)
+        sched.step()
+    sched.run()                           # collect and forget completions
+    return time.time() - t0
+
+
+def serve_steady_rows() -> list[tuple]:
+    from repro.configs import get_config
+    from repro.models import backbone as bb
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.scheduler import ContinuousScheduler, SchedulerConfig
+
+    smoke = getattr(common, "SMOKE", False)
+    n_requests = 8 if smoke else 24
+    max_new = 6 if smoke else 16
+    lengths = (8, 16, 32)
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = bb.init_params(cfg, KEY)
+    sched = ContinuousScheduler(
+        cfg, params, max_len=max(lengths) + max_new + 8,
+        sched=SchedulerConfig(buckets=lengths, max_slots=8,
+                              prefill_group=4, chunk=4))
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab, rng.choice(lengths)),
+                    max_new_tokens=max_new) for _ in range(n_requests)]
+
+    # warm-up drain: compiles per-bucket prefill + inject + chunk programs
+    _drain_with_poisson_arrivals(sched, reqs, np.random.RandomState(1),
+                                 rate=3.0)
+    dt = _drain_with_poisson_arrivals(sched, reqs, np.random.RandomState(1),
+                                      rate=3.0)
+    toks = n_requests * max_new           # greedy, eos_id=-1: full budgets
+    rows = [
+        ("serve.tokens_per_s", toks / dt,
+         f"{n_requests} reqs Poisson mix {lengths} max_new={max_new}"),
+        ("serve.drain_ms", dt * 1e3, "steady-state queue drain"),
+    ]
+
+    # equal-length fast path at the same token budget, as the scale bar
+    eng = ServeEngine(cfg, params, max_len=max(lengths) + max_new + 8)
+    equal = [Request(tokens=rng.randint(0, cfg.vocab, 16),
+                     max_new_tokens=max_new) for _ in range(n_requests)]
+    eng.generate(equal)                   # compile
+    t0 = time.time()
+    eng.generate(equal)
+    dt_eq = time.time() - t0
+    rows.append(("serve.equal_len_tokens_per_s", toks / dt_eq,
+                 f"{n_requests} equal-length reqs, single while_loop"))
+    return rows

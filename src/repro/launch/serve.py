@@ -2,12 +2,37 @@
 
   python -m repro.launch.serve --arch mixtral-8x7b --shape decode_32k --dry-run
   python -m repro.launch.serve --arch qwen2-0.5b --local --tokens 8
+  python -m repro.launch.serve --arch qwen2-0.5b --local --queue 24 \
+      --lengths 8,16,32            # continuous-batching scheduler
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def _serve_queue(cfg, params, args) -> int:
+    """Mixed-length request queue through the ServeEngine scheduler."""
+    import numpy as np
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.scheduler import SchedulerConfig
+
+    lengths = tuple(int(x) for x in args.lengths.split(","))
+    max_len = max(lengths) + args.tokens + 8
+    eng = ServeEngine(cfg, params, max_len=max_len,
+                      scheduler=SchedulerConfig(buckets=lengths))
+    rng = np.random.RandomState(0)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab, rng.choice(lengths)),
+                    max_new_tokens=args.tokens)
+            for _ in range(args.queue)]
+    t0 = time.time()
+    outs = eng.generate(reqs)
+    dt = time.time() - t0
+    toks = sum(len(c.tokens) for c in outs)
+    print(f"served {len(reqs)} mixed-length requests "
+          f"({toks} tokens) in {dt:.2f}s -> {toks / dt:.1f} tok/s")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -18,6 +43,11 @@ def main(argv=None) -> int:
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--local", action="store_true")
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--queue", type=int, default=0, metavar="N",
+                    help="serve N mixed-length requests through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--lengths", default="8,16,32",
+                    help="comma-separated prompt-length mix for --queue")
     args = ap.parse_args(argv)
 
     if args.dry_run:
@@ -36,6 +66,10 @@ def main(argv=None) -> int:
         cfg = cfg.reduced()
     key = jax.random.PRNGKey(0)
     params = bb.init_params(cfg, key)
+
+    if args.queue:
+        return _serve_queue(cfg, params, args)
+
     B, T = 2, 16
     batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab)}
     if cfg.vlm is not None:

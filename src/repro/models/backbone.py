@@ -228,7 +228,7 @@ def _apply_ffn(cfg: ArchConfig, spec, p, x, *, dropless: bool = False):
 
 
 def _apply_sublayer(cfg: ArchConfig, spec, p, x, *, window: int,
-                    dropless: bool = False):
+                    dropless: bool = False, kv_valid_len=None):
     """Full-sequence (train/prefill) sublayer.  Returns (x, kv_or_state, aux)."""
     h = _norm_apply(cfg, p["norm"], x)
     state = None
@@ -236,7 +236,8 @@ def _apply_sublayer(cfg: ArchConfig, spec, p, x, *, window: int,
         y, k, v = attention_apply(
             p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.resolved_head_dim, causal=True, window=window,
-            rope_theta=cfg.rope_theta, return_kv=True)
+            rope_theta=cfg.rope_theta, return_kv=True,
+            kv_valid_len=kv_valid_len)
         state = (k, v)
     elif spec["kind"] == "mamba":
         y, state = mamba_apply(p["mamba"], h, return_state=True, **_mamba_kwargs(cfg))
@@ -267,7 +268,7 @@ def _moe_layer_count(cfg: ArchConfig) -> int:
 
 def _run_superblocks(cfg: ArchConfig, params, x, *, window: int,
                      collect_cache: bool = False, remat: bool = True,
-                     dropless: bool = False):
+                     dropless: bool = False, kv_valid_len=None):
     """Scan over stacked superblocks.  Returns (x, aux, caches or None)."""
     specs = sublayer_specs(cfg)
     n_moe = _moe_layer_count(cfg)
@@ -279,7 +280,8 @@ def _run_superblocks(cfg: ArchConfig, params, x, *, window: int,
         states = []
         for spec, p in zip(specs, sb_params):
             h, st, aux = _apply_sublayer(cfg, spec, p, h, window=window,
-                                         dropless=dropless)
+                                         dropless=dropless,
+                                         kv_valid_len=kv_valid_len)
             aux_acc = _acc_aux(aux_acc, aux, n_moe)
             states.append(st)
         out = _stack_states(cfg, specs, states) if collect_cache else None
@@ -563,8 +565,15 @@ def _decode_sublayer(cfg: ArchConfig, spec, p, x, cache_sb, counters, cache_len)
 def decode_step(cfg: ArchConfig, params, tokens, cache, cache_len):
     """One decoding step.  tokens: (B, 1) int32; cache from init_cache/prefill.
 
-    Returns (logits (B, vocab), new_cache).
+    cache_len may be a scalar (all rows at one depth, the classic path) or
+    a (B,) vector (slot-pool decode: every row tracks its own context
+    depth; attention writes/attends per row).  Returns (logits (B, vocab),
+    new_cache).
     """
+    if jnp.ndim(cache_len) > 0:
+        assert cfg.rope_theta > 0, \
+            "per-row cache_len needs RoPE positions (absolute sinusoidal " \
+            "offsets are scalar-only)"
     x = embedding_apply(params["embed"], tokens)
     if cfg.rope_theta == 0:
         x = x + sinusoidal_positions(1, cfg.d_model, offset=cache_len).astype(x.dtype)
@@ -607,16 +616,28 @@ def decode_step(cfg: ArchConfig, params, tokens, cache, cache_len):
 
 
 def prefill(cfg: ArchConfig, params, batch, *, long_context: bool = False,
-            max_len: int = 0):
+            max_len: int = 0, lengths=None):
     """Prefill: run the context, return (last-token logits, decode cache).
 
     batch: tokens (B, T) [+ patches/frames].  The returned cache is ring-
     compacted to cache_window(max_len) capacity (max_len: total context +
     generation budget; defaults to prompt length + 64).
+
+    lengths: optional (B,) valid prompt lengths for a right-padded
+    (bucketed) batch.  Pad keys are masked out of attention for every row
+    — real-token activations are bit-identical to an unpadded prefill —
+    and the returned logits are gathered at each row's last real token.
+    Padded prefill is attention-only (recurrent state would integrate the
+    pad tokens) and requires the bucket to fit the cache window.
     """
     tokens = batch["tokens"]
     B, T = tokens.shape
     window = cfg.sliding_window
+    if lengths is not None:
+        assert (cfg.encdec is None and cfg.hybrid is None
+                and cfg.xlstm is None and "patches" not in batch), \
+            "bucketed (right-padded) prefill supports attention-only " \
+            "token batches"
     if cfg.encdec is not None:
         enc_out = _run_encoder(cfg, params, batch["frames"])
         x, _ = _embed_inputs(cfg, params, batch)
@@ -634,14 +655,20 @@ def prefill(cfg: ArchConfig, params, batch, *, long_context: bool = False,
         eff_window = window or (cache_window(cfg, total_T, long_context=long_context)
                                 if long_context else 0)
         x, _, caches = _run_superblocks(cfg, params, x, window=eff_window,
-                                        collect_cache=True, dropless=True)
+                                        collect_cache=True, dropless=True,
+                                        kv_valid_len=lengths)
         S = cache_window(cfg, max_len or total_T + 64, long_context=long_context)
+        if lengths is not None:
+            assert total_T <= S, \
+                f"bucket {total_T} exceeds cache window {S}: ring " \
+                "compaction would drop real (non-pad) tokens"
         if "k" in caches:
             caches = dict(caches)
             caches["k"] = _ring_compact(caches["k"], S, total_T)
             caches["v"] = _ring_compact(caches["v"], S, total_T)
     x = _norm_apply(cfg, params["final_norm"], x)
-    logits = (x[:, -1].astype(jnp.float32)
+    last = x[:, -1] if lengths is None else x[jnp.arange(B), lengths - 1]
+    logits = (last.astype(jnp.float32)
               @ _readout_weight(cfg, params).astype(jnp.float32))
     return logits, caches, total_T
 

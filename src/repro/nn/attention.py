@@ -50,11 +50,13 @@ def project_qkv(params, x, *, n_heads: int, n_kv_heads: int, head_dim: int):
 
 # ------------------------------------------------------------ flash core ---
 def _block_attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
-                  scale: float, m_prev, l_prev, acc_prev):
+                  scale: float, m_prev, l_prev, acc_prev, kv_valid_len=None):
     """One online-softmax update for a (q_chunk, kv_block) tile.
 
     q: (B, Tq, Hkv, G, D);  k/v: (B, Sk, Hkv, D)
     m/l: (B, Hkv, G, Tq);   acc: (B, Tq, Hkv, G, D)
+    kv_valid_len: optional (B,) per-row count of valid key positions
+    (right-padded prefill batches mask pad keys out of every row).
     """
     s = jnp.einsum("bthgd,bshd->bhgts", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale           # (B,Hkv,G,Tq,Sk)
@@ -63,14 +65,20 @@ def _block_attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         mask &= q_pos[:, None] >= k_pos[None, :]
     if window > 0:
         mask &= k_pos[None, :] > q_pos[:, None] - window
-    s = jnp.where(mask, s, NEG_INF)
+    if kv_valid_len is not None:
+        mask = mask[None] & (k_pos[None, None, :]
+                             < kv_valid_len[:, None, None])  # (B,Tq,Sk)
+        maskx = mask[:, None, None]                          # vs (B,Hkv,G,Tq,Sk)
+    else:
+        maskx = mask
+    s = jnp.where(maskx, s, NEG_INF)
 
     m_cur = jnp.max(s, axis=-1)                             # (B,Hkv,G,Tq)
     m_new = jnp.maximum(m_prev, m_cur)
     # guard fully-masked rows: keep m finite
     m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
     p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(mask, p, 0.0)
+    p = jnp.where(maskx, p, 0.0)
     corr = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev) - m_safe)
     corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
     l_new = corr * l_prev + jnp.sum(p, axis=-1)
@@ -81,11 +89,13 @@ def _block_attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     q_block: int = 512, kv_block: int = 1024,
-                    q_offset: int = 0) -> jnp.ndarray:
+                    q_offset: int = 0, kv_valid_len=None) -> jnp.ndarray:
     """Blocked attention; never materializes (T, S).
 
     q: (B, T, Hq, D), k/v: (B, S, Hkv, D).  q_offset: absolute position of
     q[0] relative to k[0] (for chunked prefill continuation).
+    kv_valid_len: optional (B,) count of valid keys per row — keys at or
+    beyond it never receive probability mass (bucketed prefill padding).
     Returns (B, T, Hq, D) in q.dtype.
     """
     B, T, Hq, D = q.shape
@@ -121,7 +131,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             k_blk, v_blk, k_pos = kv
             m, l, a = _block_attend(q_chunk, k_blk, v_blk, q_pos, k_pos,
                                     causal=causal, window=window, scale=scale,
-                                    m_prev=m, l_prev=l, acc_prev=a)
+                                    m_prev=m, l_prev=l, acc_prev=a,
+                                    kv_valid_len=kv_valid_len)
             return (m, l, a), None
 
         (m, l, a), _ = jax.lax.scan(
@@ -144,10 +155,11 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 def decode_attention(q, k_cache, v_cache, attend_len) -> jnp.ndarray:
     """Single-step attention against a cache.
 
-    q: (B, 1, Hq, D); k/v_cache: (B, S, Hkv, D); attend_len: () number of
-    valid cache slots.  Ring buffers (SWA) pass attend_len == S once full;
-    slot order does not matter because keys carry absolute RoPE phases.
-    Returns (B, 1, Hq, D).
+    q: (B, 1, Hq, D); k/v_cache: (B, S, Hkv, D); attend_len: () or (B,)
+    number of valid cache slots (per-row counts serve slot pools whose
+    rows sit at different depths).  Ring buffers (SWA) pass attend_len ==
+    S once full; slot order does not matter because keys carry absolute
+    RoPE phases.  Returns (B, 1, Hq, D).
     """
     B, _, Hq, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -156,7 +168,12 @@ def decode_attention(q, k_cache, v_cache, attend_len) -> jnp.ndarray:
     qg = q.reshape(B, 1, Hkv, G, D)
     s = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale      # (B,Hkv,G,1,S)
-    valid = jnp.arange(S) < jnp.asarray(attend_len)
+    attend_len = jnp.asarray(attend_len)
+    if attend_len.ndim == 0:
+        valid = jnp.arange(S) < attend_len                   # broadcast over S
+    else:
+        valid = (jnp.arange(S)[None, :]
+                 < attend_len[:, None])[:, None, None, None, :]
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgts,bshd->bthgd", p, v_cache.astype(jnp.float32))
@@ -168,11 +185,12 @@ def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
                     head_dim: int, causal: bool = True, window: int = 0,
                     rope_theta: float = 10000.0, positions=None,
                     q_block: int = 512, kv_block: int = 1024,
-                    return_kv: bool = False):
+                    return_kv: bool = False, kv_valid_len=None):
     """Self-attention over x: (B, T, d_model).
 
     With return_kv, also returns the (roped) K/V tensors (B, T, Hkv, D)
-    so prefill can populate a decode cache.
+    so prefill can populate a decode cache.  kv_valid_len (B,) masks
+    right-padding keys out of every row (bucketed prefill).
     """
     B, T, _ = x.shape
     q, k, v = project_qkv(params, x, n_heads=n_heads, n_kv_heads=n_kv_heads,
@@ -183,7 +201,8 @@ def attention_apply(params, x, *, n_heads: int, n_kv_heads: int,
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
     out = flash_attention(q, k, v, causal=causal, window=window,
-                          q_block=q_block, kv_block=kv_block)
+                          q_block=q_block, kv_block=kv_block,
+                          kv_valid_len=kv_valid_len)
     out = out.reshape(B, T, n_heads * head_dim)
     y = dense_apply(params["wo"], out)
     if return_kv:
@@ -220,7 +239,9 @@ def cross_attention_decode(params, x, k, v, *, n_heads: int, head_dim: int):
 def attention_decode_apply(params, x, k_cache, v_cache, cache_len, *,
                            n_heads: int, n_kv_heads: int, head_dim: int,
                            rope_theta: float = 10000.0):
-    """One-token decode.  x: (B, 1, d_model); cache_len: () tokens seen so far.
+    """One-token decode.  x: (B, 1, d_model); cache_len: () or (B,) tokens
+    seen so far (per-row counts let a slot pool decode rows that sit at
+    different context depths in one program).
 
     The cache is a ring buffer of size S (SWA archs size it to the window;
     full-attention archs size it to the max context).  The new token's K/V
@@ -236,9 +257,14 @@ def attention_decode_apply(params, x, k_cache, v_cache, cache_len, *,
     if rope_theta > 0:
         q = apply_rope(q, pos_b, rope_theta)
         k = apply_rope(k, pos_b, rope_theta)
-    idx = pos % S
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), idx, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), idx, axis=1)
+    if pos.ndim == 0:
+        idx = pos % S
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), idx, axis=1)
+    else:
+        idx = pos_b[:, 0] % S                  # per-row write slot
+        k_cache = k_cache.at[jnp.arange(B), idx].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[jnp.arange(B), idx].set(v[:, 0].astype(v_cache.dtype))
     attend_len = jnp.minimum(pos + 1, S)
     out = decode_attention(q, k_cache, v_cache, attend_len)
     out = out.reshape(B, 1, n_heads * head_dim)

@@ -1,13 +1,23 @@
-"""Batched serving engine: request queue -> prefill -> sync-free decode.
+"""Serving engine: request queue -> bucketed prefill -> slot-pool decode.
 
-A deliberately small, dependency-free engine for the Remote-NN role:
-requests with equal-length prompts are grouped into one prefill; decoding
-runs entirely on device as a single `jax.lax.while_loop` — sampling,
-EOS/done masking, and per-request length limits are all in-graph, and the
-KV cache is donated to the loop (on TPU).  One `generate` call therefore issues
-O(1) host transfers (prefill dispatch, loop dispatch, one final copy of
-the token buffer) instead of O(max_new_tokens) round-trips.  Greedy or
-temperature sampling.
+Two execution paths share one `generate` API for the Remote-NN role:
+
+  * equal-length fast path — requests whose prompts share one length are
+    grouped into a single prefill and decoded as one
+    `jax.lax.while_loop` device program (sampling, EOS/done masking and
+    per-request length limits in-graph, cache donated on TPU), issuing
+    O(1) host transfers per call.  Bit-compatible with the PR-1 engine.
+  * continuous batching — mixed-length queues route through
+    `repro.serve.scheduler.ContinuousScheduler`: prompts are right-padded
+    into length buckets (pad keys masked out of attention), prefilled
+    per bucket, and injected into a fixed-width decode slot pool whose
+    chunked while_loop segments evict finished requests and admit queued
+    ones without recompiling.  Greedy outputs are identical to decoding
+    each request alone.
+
+Per-request temperature (0 => greedy) and EOS ids are honoured in-graph
+on both paths; architectures the scheduler cannot serve (recurrent state,
+MoE, absolute positions) fall back to equal-length grouping.
 """
 from __future__ import annotations
 
@@ -21,6 +31,12 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import backbone as bb
+from repro.serve.scheduler import (
+    ContinuousScheduler,
+    SchedulerConfig,
+    sample_tokens,
+    supports_continuous_batching,
+)
 
 
 @dataclasses.dataclass
@@ -39,15 +55,17 @@ class Completion:
 
 
 def _decode_loop(cfg: ArchConfig, params, logits0, cache, cache_len, key,
-                 eos_ids, max_lens, max_new, temperature, *, buf_len: int,
+                 eos_ids, max_lens, max_new, temps, *, buf_len: int,
                  greedy: bool):
     """Whole decode phase as one device program.
 
     Samples the first token from the prefill logits, then runs a
     while_loop of decode_step + sample + done-masking.  max_new is a
-    traced loop bound (no recompile across request budgets); only the
-    batch/cache shapes and the greedy flag shape the program.  Returns
-    (token buffer (B, buf_len), per-request lengths, steps executed).
+    traced loop bound (no recompile across request budgets); temps is a
+    per-request vector (rows with temp <= 0 take argmax in-graph); only
+    the batch/cache shapes and the all-greedy flag shape the program.
+    Returns (token buffer (B, buf_len), per-request lengths, steps
+    executed).
     """
     B = logits0.shape[0]
 
@@ -55,8 +73,7 @@ def _decode_loop(cfg: ArchConfig, params, logits0, cache, cache_len, key,
         if greedy:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
         key, sub = jax.random.split(key)
-        t = jax.random.categorical(sub, logits / temperature, axis=-1)
-        return t.astype(jnp.int32), key
+        return sample_tokens(logits, temps, sub), key
 
     tok0, key = sample(logits0, key)
     buf = jnp.zeros((B, buf_len), jnp.int32).at[:, 0].set(tok0)
@@ -84,13 +101,29 @@ def _decode_loop(cfg: ArchConfig, params, logits0, cache, cache_len, key,
     return buf, lengths, step + 1
 
 
+def _stack_extras(requests: list[Request]) -> dict:
+    """Validated extras batch: every request must carry the same keys
+    (a mixed batch would silently drop or misalign modality inputs)."""
+    key_sets = {frozenset((r.extras or {}).keys()) for r in requests}
+    if len(key_sets) > 1:
+        raise ValueError(
+            "all requests in a batch must carry the same extras keys; got "
+            + " vs ".join(str(sorted(s)) for s in key_sets))
+    ex = requests[0].extras or {}
+    return {k: jnp.asarray(np.stack([r.extras[k] for r in requests]))
+            for k in ex}
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, scheduler: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self._seed = seed
         self._key = jax.random.PRNGKey(seed)
+        self._sched_cfg = scheduler or SchedulerConfig()
+        self._sched: Optional[ContinuousScheduler] = None
         # cache is donated where the backend supports it (TPU): the
         # prefill cache buffers are reused in place by the loop instead
         # of being copied per step
@@ -99,33 +132,72 @@ class ServeEngine:
                              static_argnames=("buf_len", "greedy"),
                              donate_argnums=donate)
 
+    @property
+    def scheduler(self) -> ContinuousScheduler:
+        """The lazily built continuous-batching scheduler (shared pool and
+        compiled programs across generate calls)."""
+        if self._sched is None:
+            self._sched = ContinuousScheduler(
+                self.cfg, self.params, sched=self._sched_cfg,
+                max_len=self.max_len, seed=self._seed + 1)
+        return self._sched
+
     def generate(self, requests: list[Request]) -> list[Completion]:
-        """All prompts must share one length (the engine's batch grouping
-        unit); returns one Completion per request."""
+        """One Completion per request, in submission order.  Equal-length
+        prompts take the single-batch fast path; mixed lengths run through
+        the continuous-batching scheduler (or equal-length grouping when
+        the architecture rules the scheduler out)."""
         assert requests, "empty batch"
+        lens = {len(r.tokens) for r in requests}
+        if len(lens) == 1:
+            return self._generate_equal(requests)
+        if (supports_continuous_batching(self.cfg)
+                and all(r.extras is None for r in requests)):
+            sched = self.scheduler
+            rids = [sched.submit(r) for r in requests]
+            outs = sched.run()
+            return [outs[rid] for rid in rids]
+        # fallback: one fast-path call per prompt-length group
+        by_len: dict[int, list[int]] = {}
+        for i, r in enumerate(requests):
+            by_len.setdefault(len(r.tokens), []).append(i)
+        out: list[Optional[Completion]] = [None] * len(requests)
+        for idxs in by_len.values():
+            for i, c in zip(idxs, self._generate_equal(
+                    [requests[i] for i in idxs])):
+                out[i] = c
+        return out
+
+    def _generate_equal(self, requests: list[Request]) -> list[Completion]:
+        """Single-prefill path: all prompts share one length."""
         T = len(requests[0].tokens)
-        assert all(len(r.tokens) == T for r in requests), \
-            "group requests by prompt length"
+        assert all(len(r.tokens) == T for r in requests)
         batch = {"tokens": jnp.asarray(
             np.stack([r.tokens for r in requests]), jnp.int32)}
-        ex = requests[0].extras or {}
-        for k in ex:
-            batch[k] = jnp.asarray(np.stack([r.extras[k] for r in requests]))
+        batch.update(_stack_extras(requests))
 
         logits, cache, total_T = bb.prefill(
             self.cfg, self.params, batch, max_len=self.max_len)
         max_new = max(r.max_new_tokens for r in requests)
         assert max_new <= self.max_len, \
             f"max_new_tokens {max_new} exceeds engine max_len {self.max_len}"
-        temp = requests[0].temperature
+        if self.cfg.sliding_window == 0:
+            # full-attention caches are not rings: a wrap would overwrite
+            # context the model still attends to, silently (SWA archs wrap
+            # by design — the window is the attention span)
+            assert total_T + max_new <= self.max_len, \
+                f"context {total_T} + max_new_tokens {max_new} exceeds " \
+                f"engine max_len {self.max_len}: decode would ring-wrap " \
+                "over live context"
+        temps = np.asarray([r.temperature for r in requests], np.float32)
         self._key, sub = jax.random.split(self._key)
         eos_ids = jnp.asarray([r.eos_id for r in requests], jnp.int32)
         max_lens = jnp.asarray([r.max_new_tokens for r in requests], jnp.int32)
 
         buf, lengths, steps = self._loop(
             self.params, logits, cache, total_T, sub, eos_ids, max_lens,
-            jnp.int32(max_new), jnp.float32(max(temp, 1e-6)),
-            buf_len=self.max_len, greedy=temp <= 0.0)
+            jnp.int32(max_new), jnp.asarray(temps),
+            buf_len=self.max_len, greedy=bool(np.all(temps <= 0.0)))
         # the single device->host transfer of the decode phase
         buf, lengths, steps = (np.asarray(buf), np.asarray(lengths),
                                int(steps))

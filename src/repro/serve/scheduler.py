@@ -1,0 +1,291 @@
+"""Continuous-batching scheduler: bucketed prefill + slot-pool decode.
+
+The unit of work is a `Request` (see `repro.serve.engine`).  Admission
+right-pads each prompt to the smallest configured length bucket, runs one
+prefill per group (compiled once per bucket), and *injects* the resulting
+rows into free slots of a fixed-width decode pool.  Decoding runs in
+chunked `lax.while_loop` segments over the whole pool: per-slot EOS ids,
+token budgets, and sampling temperatures all live in-graph, so one
+compiled program serves every mix of requests.  Between segments the host
+*evicts* finished slots (one small device->host copy of the token buffer)
+and admits queued requests into the freed slots — the loop never
+recompiles and never drains.
+
+Correctness invariants (tested against one-request-at-a-time decode):
+  * pad keys are masked out of prefill attention and pad cache slots are
+    overwritten by decode writes before they become attendable, so bucket
+    padding never changes a request's tokens;
+  * batch rows are independent end-to-end, so evict/inject of one slot
+    preserves every other slot's cache contents bit-for-bit.
+
+The padded-prefill path needs per-row attention masking and per-row cache
+depths, so the scheduler serves attention-only token models (no recurrent
+state to pollute with pads, no MoE capacity for pads to compete over);
+`supports_continuous_batching` gates it and `ServeEngine` falls back to
+equal-length grouping elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import backbone as bb
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    buckets: tuple[int, ...] = (8, 16, 32, 64, 128)
+    max_slots: int = 8         # decode pool width (concurrent requests)
+    prefill_group: int = 4     # fixed prefill batch (bounds compile count)
+    chunk: int = 8             # decode steps per while_loop segment
+
+
+def supports_continuous_batching(cfg: ArchConfig) -> bool:
+    """Bucketed prefill + slot-pool decode needs a pure-attention decoder:
+    recurrent layers would integrate pad tokens into their state, MoE
+    capacity would let pads evict real tokens, absolute sinusoidal
+    positions are scalar-offset only, and SWA ring compaction could drop
+    real tokens behind the pads."""
+    return (cfg.hybrid is None and cfg.xlstm is None and cfg.encdec is None
+            and cfg.vlm is None and cfg.moe is None and cfg.rope_theta > 0
+            and cfg.sliding_window == 0)
+
+
+def sample_tokens(logits, temps, key):
+    """Per-request sampling, in-graph: rows with temp <= 0 take argmax
+    (bit-identical to a pure-greedy program), others draw categorically at
+    their own temperature."""
+    greedy_t = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[..., None]
+    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temps <= 0.0, greedy_t, drawn)
+
+
+class ContinuousScheduler:
+    """Drives a decode slot pool over an unbounded request queue.
+
+    submit() enqueues and returns a request id; run() drains the queue and
+    returns {rid: Completion}; step() advances one admit+decode segment
+    (benchmarks interleave Poisson arrivals between steps).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 sched: Optional[SchedulerConfig] = None,
+                 max_len: int = 256, seed: int = 0):
+        assert supports_continuous_batching(cfg), \
+            f"{cfg.name}: continuous batching needs a pure-attention " \
+            "RoPE decoder (use ServeEngine's equal-length grouping)"
+        self.cfg = cfg
+        self.params = params
+        self.sched = sched or SchedulerConfig()
+        self.max_len = max_len
+        self._key = jax.random.PRNGKey(seed)
+        S = self.sched.max_slots
+        L = max_len
+        cache = bb.init_cache(cfg, S, max_len)
+        assert set(cache) == {"k", "v"}, sorted(cache)
+        self._pool = {
+            "buf": jnp.zeros((S, L), jnp.int32),
+            "gen": jnp.zeros((S,), jnp.int32),
+            "done": jnp.ones((S,), bool),
+            "tok": jnp.zeros((S, 1), jnp.int32),
+            "cache": cache,
+            "cache_len": jnp.zeros((S,), jnp.int32),
+            "eos": jnp.full((S,), -1, jnp.int32),
+            "max_new": jnp.ones((S,), jnp.int32),
+            "temps": jnp.zeros((S,), jnp.float32),
+        }
+        self._slot_rid: list[Optional[int]] = [None] * S
+        self._queue: deque = deque()           # (rid, Request)
+        self._results: dict[int, object] = {}
+        self._next_rid = 0
+
+        def _prefill(params, tokens, lengths):
+            return bb.prefill(cfg, params, {"tokens": tokens},
+                              max_len=max_len, lengths=lengths)
+
+        self._prefill = jax.jit(_prefill)      # compiles once per bucket
+        self._inject = jax.jit(self._inject_impl)
+        donate = (1,) if jax.default_backend() == "tpu" else ()
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=donate)
+
+    # ------------------------------------------------------------- device --
+
+    def _inject_impl(self, pool, slots, rows, logits0, prompt_lens, eos,
+                     max_new, temps, key):
+        """Seed freshly prefilled requests into pool slots, in-graph.
+
+        slots: (G,) target slot per group row; dummy rows (group padding)
+        carry slot == max_slots and are dropped by the scatters.  The
+        first token of each request is sampled here from the prefill
+        logits, mirroring the equal-length engine loop.
+        """
+        S, L = pool["buf"].shape
+        tok0 = sample_tokens(logits0, temps, key)
+        row0 = jnp.zeros((slots.shape[0], L), jnp.int32).at[:, 0].set(tok0)
+        new = dict(pool)
+        new["buf"] = pool["buf"].at[slots].set(row0, mode="drop")
+        new["gen"] = pool["gen"].at[slots].set(1, mode="drop")
+        new["done"] = pool["done"].at[slots].set(
+            (tok0 == eos) | (max_new <= 1), mode="drop")
+        new["tok"] = pool["tok"].at[slots].set(tok0[:, None], mode="drop")
+        new["cache"] = jax.tree.map(
+            lambda leaf, r: leaf.at[:, :, slots].set(
+                r.astype(leaf.dtype), mode="drop"),
+            pool["cache"], rows)
+        new["cache_len"] = pool["cache_len"].at[slots].set(
+            prompt_lens, mode="drop")
+        new["eos"] = pool["eos"].at[slots].set(eos, mode="drop")
+        new["max_new"] = pool["max_new"].at[slots].set(max_new, mode="drop")
+        new["temps"] = pool["temps"].at[slots].set(temps, mode="drop")
+        return new
+
+    def _chunk_impl(self, params, pool, active, key, n_steps):
+        """Up to n_steps decode steps over the whole pool as one
+        while_loop; exits early when every occupied slot is done.
+        n_steps is traced, so segment length never recompiles."""
+        S, L = pool["buf"].shape
+
+        def cond(state):
+            step, pool, _ = state
+            return (step < n_steps) & jnp.any(active & ~pool["done"])
+
+        def body(state):
+            step, pool, key = state
+            logits, cache = bb.decode_step(self.cfg, params, pool["tok"],
+                                           pool["cache"], pool["cache_len"])
+            key, sub = jax.random.split(key)
+            t = sample_tokens(logits, pool["temps"], sub)
+            run = active & ~pool["done"]
+            pos = jnp.where(run, pool["gen"], L)     # OOB rows -> dropped
+            buf = pool["buf"].at[jnp.arange(S), pos].set(t, mode="drop")
+            gen = pool["gen"] + run.astype(jnp.int32)
+            done = pool["done"] | (run & ((t == pool["eos"])
+                                          | (gen >= pool["max_new"])))
+            new = dict(pool, buf=buf, gen=gen, done=done, cache=cache,
+                       tok=jnp.where(run[:, None], t[:, None], pool["tok"]),
+                       cache_len=pool["cache_len"] + 1)
+            return step + 1, new, key
+
+        _, pool, key = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), pool, key))
+        return pool, key
+
+    # --------------------------------------------------------------- host --
+
+    def _bucket_of(self, prompt_len: int) -> int:
+        fits = [b for b in self.sched.buckets
+                if prompt_len <= b <= self.max_len]
+        return min(fits) if fits else prompt_len
+
+    def submit(self, request) -> int:
+        T = len(request.tokens)
+        assert T >= 1, "empty prompt"
+        assert request.max_new_tokens >= 1, "max_new_tokens must be >= 1"
+        bucket = self._bucket_of(T)
+        assert max(bucket, T + request.max_new_tokens) <= self.max_len, \
+            f"prompt {T} (+{request.max_new_tokens} new, bucket {bucket}) " \
+            f"exceeds scheduler max_len {self.max_len}"
+        assert request.extras is None, \
+            "the continuous scheduler serves token-only requests"
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, request))
+        return rid
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._slot_rid) if r is None]
+
+    def _admit(self) -> bool:
+        """Admit one bucket group from the queue head into free slots.
+
+        Groups are formed in FIFO order keyed by the head request's
+        bucket, so the queue head is always in the next group — no
+        request can be starved by a stream of other-bucket arrivals."""
+        free = self._free_slots()
+        if not free or not self._queue:
+            return False
+        G = self.sched.prefill_group
+        head_bucket = self._bucket_of(len(self._queue[0][1].tokens))
+        take, keep = [], deque()
+        for rid, req in self._queue:
+            if (len(take) < min(len(free), G)
+                    and self._bucket_of(len(req.tokens)) == head_bucket):
+                take.append((rid, req))
+            else:
+                keep.append((rid, req))
+        self._queue = keep
+
+        tokens = np.zeros((G, head_bucket), np.int32)
+        lengths = np.ones((G,), np.int32)        # dummies: 1 valid token
+        slots = np.full((G,), self.sched.max_slots, np.int32)
+        eos = np.full((G,), -1, np.int32)
+        max_new = np.ones((G,), np.int32)
+        temps = np.zeros((G,), np.float32)
+        for g, ((rid, req), slot) in enumerate(zip(take, free)):
+            T = len(req.tokens)
+            tokens[g, :T] = np.asarray(req.tokens, np.int32)
+            lengths[g] = T
+            slots[g] = slot
+            eos[g] = req.eos_id
+            max_new[g] = req.max_new_tokens
+            temps[g] = req.temperature
+            self._slot_rid[slot] = rid
+
+        logits0, rows, _ = self._prefill(self.params, jnp.asarray(tokens),
+                                         jnp.asarray(lengths))
+        self._key, sub = jax.random.split(self._key)
+        self._pool = self._inject(
+            self._pool, jnp.asarray(slots), rows, logits0,
+            jnp.asarray(lengths), jnp.asarray(eos), jnp.asarray(max_new),
+            jnp.asarray(temps), sub)
+        return True
+
+    def _active_mask(self) -> jnp.ndarray:
+        return jnp.asarray(
+            np.asarray([r is not None for r in self._slot_rid]))
+
+    def _drain(self) -> list[int]:
+        """Evict finished slots: one host copy of buf/gen per segment."""
+        from repro.serve.engine import Completion
+        done = np.asarray(self._pool["done"])
+        fin = [i for i, rid in enumerate(self._slot_rid)
+               if rid is not None and done[i]]
+        if not fin:
+            return []
+        buf = np.asarray(self._pool["buf"])
+        gen = np.asarray(self._pool["gen"])
+        out = []
+        for i in fin:
+            rid = self._slot_rid[i]
+            self._results[rid] = Completion(
+                buf[i, :gen[i]].astype(np.int32), int(gen[i]))
+            self._slot_rid[i] = None
+            out.append(rid)
+        return out
+
+    def step(self) -> list[int]:
+        """One scheduling round: admit groups while slots are free, decode
+        one chunk, evict what finished.  Returns completed request ids."""
+        while self._admit():
+            pass
+        if not any(r is not None for r in self._slot_rid):
+            return []
+        self._key, sub = jax.random.split(self._key)
+        self._pool, _ = self._chunk(self.params, self._pool,
+                                    self._active_mask(), sub,
+                                    jnp.int32(self.sched.chunk))
+        return self._drain()
+
+    def run(self) -> dict:
+        """Drain queue and pool; returns (and forgets) {rid: Completion}."""
+        while self._queue or any(r is not None for r in self._slot_rid):
+            self.step()
+        out, self._results = self._results, {}
+        return out

@@ -16,11 +16,16 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
     class _AnyStrategy:
-        """Stand-in strategy factory: accepts any call chain, returns None
-        (the values are never drawn — the test body is replaced by a skip)."""
+        """Stand-in strategy factory: accepts any attribute/call chain
+        (st.lists(...).map(bytes), st.one_of(...)) and keeps returning
+        itself — the values are never drawn; the test body is replaced by
+        a skip."""
 
         def __getattr__(self, name):
-            return lambda *a, **k: None
+            return self
+
+        def __call__(self, *a, **k):
+            return self
 
     st = _AnyStrategy()
     hnp = _AnyStrategy()

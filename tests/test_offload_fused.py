@@ -107,6 +107,31 @@ def test_agile_forward_fused_bitexact():
                                   np.asarray(int2["features"]))
 
 
+@pytest.mark.parametrize("B", [1, 3, 6])
+def test_measure_payload_fused_vs_seed_on_ragged_rows(B):
+    """Feature streams whose row count (B * H * W) is not a multiple of
+    the kernel tile go through the kernels/common.py pad-to-grid helper;
+    payload accounting must agree with the seed two-pass path exactly."""
+    from repro.models.cnn import extractor_apply
+
+    params = _params()
+    x = jax.random.normal(KEY, (B, 16, 16, 3))
+    total_f, idx_f = measure_payload(CFG, params, x, use_fused=True)
+    total_s, idx_s = measure_payload(CFG, params, x, use_fused=False)
+    assert total_f == total_s
+    np.testing.assert_array_equal(idx_f, idx_s)
+
+    # the interpret-mode Pallas kernel on the same ragged row count
+    raw = extractor_apply(params["extractor"], x)
+    perm = tuple(int(i) for i in np.asarray(params["mapping"]))
+    pal = fused_offload_op(raw, params["quant"]["centers"], perm=perm,
+                           k=CFG.agile.k, interpret=True)
+    ref = offload_fused_ref(raw, params["quant"]["centers"], perm,
+                            CFG.agile.k)
+    for p, r in zip(pal, ref):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(r))
+
+
 def test_measure_payload_bytes_identical_to_seed_path():
     """measure_payload (fused + batched pack) == seed per-sample pipeline."""
     params = _params()

@@ -6,6 +6,12 @@ from _hypothesis_compat import given, settings, st
 
 from repro.nn.attention import flash_attention, reference_attention
 from repro.core.xai import channel_importance
+from repro.compress.lzw import (
+    lzw_decode,
+    lzw_encode,
+    pack_indices,
+    pack_indices_batch,
+)
 from repro.compress.quantize import dequantize, hard_indices, quantizer_init
 
 KEY = jax.random.PRNGKey(11)
@@ -52,6 +58,30 @@ def test_channel_importance_is_distribution(C):
     imp = channel_importance(x)
     np.testing.assert_allclose(np.asarray(jnp.sum(imp, -1)), 1.0, rtol=1e-5)
     assert bool(jnp.all(imp >= 0))
+
+
+@given(st.one_of(
+    st.binary(max_size=1024),
+    # low-entropy payloads (the quantized-index regime LZW targets)
+    st.lists(st.integers(0, 3), max_size=2048).map(bytes)))
+@settings(max_examples=40, deadline=None)
+def test_lzw_round_trip(data):
+    """decode(encode(x)) == x for arbitrary and low-entropy byte strings."""
+    assert lzw_decode(lzw_encode(data)) == data
+
+
+@given(B=st.integers(1, 9), n=st.integers(1, 80),
+       bits=st.sampled_from([1, 2, 3, 4, 5, 8]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_pack_indices_batch_matches_per_sample(B, n, bits, seed):
+    """The vectorized batch packer is byte-identical to packing each
+    sample alone, across ragged batch/row sizes and every bit width."""
+    idx = np.random.RandomState(seed).randint(0, 2 ** bits, size=(B, n))
+    got = pack_indices_batch(idx, bits)
+    assert len(got) == B
+    for b in range(B):
+        assert got[b] == pack_indices(idx[b], bits)
 
 
 @given(st.lists(st.floats(-10, 10), min_size=1, max_size=64),

@@ -87,6 +87,57 @@ def test_generate_varied_budgets_do_not_recompile():
     assert eng._loop._cache_size() == 1
 
 
+def test_per_request_temperatures_in_one_batch():
+    """Regression: the engine used requests[0].temperature for the whole
+    batch.  A greedy row batched with a sampled row must still produce its
+    greedy (argmax) tokens, in one compiled program."""
+    cfg, eng = _engine()
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(0, cfg.vocab, 8)
+    ref = eng.generate([Request(tokens=prompt, max_new_tokens=5)])[0]
+    outs = eng.generate([
+        Request(tokens=prompt, max_new_tokens=5, temperature=0.0),
+        Request(tokens=prompt, max_new_tokens=5, temperature=1.4),
+    ])
+    np.testing.assert_array_equal(outs[0].tokens, ref.tokens)
+    assert len(outs[1].tokens) == 5
+    assert outs[1].tokens.min() >= 0 and outs[1].tokens.max() < cfg.vocab
+
+
+def test_extras_key_mismatch_raises():
+    """Regression: a batch whose first request carried extras crashed with
+    TypeError on the extras-less rows (and extras-less first requests
+    silently dropped the others' extras).  Both now raise ValueError."""
+    import pytest
+
+    cfg, eng = _engine()
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(0, cfg.vocab, 8)
+    patch = rng.randn(4, 16).astype(np.float32)
+    with_ex = Request(tokens=prompt, extras={"patches": patch})
+    without = Request(tokens=prompt)
+    with pytest.raises(ValueError, match="extras"):
+        eng.generate([with_ex, without])
+    with pytest.raises(ValueError, match="extras"):
+        eng.generate([without, with_ex])
+
+
+def test_uniform_extras_batch_generates():
+    """A batch where every request carries the same extras keys runs the
+    vlm prefill path end to end."""
+    cfg = get_config("internvl2-1b").reduced()
+    params = bb.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_len=64)
+    rng = np.random.RandomState(9)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab, 8), max_new_tokens=3,
+                    extras={"patches": rng.randn(
+                        cfg.vlm.n_patches, cfg.vlm.vision_dim
+                    ).astype(np.float32)})
+            for _ in range(2)]
+    outs = eng.generate(reqs)
+    assert [len(c.tokens) for c in outs] == [3, 3]
+
+
 def test_generate_matches_manual_decode_loop():
     """Engine greedy output == hand-rolled prefill+decode loop."""
     cfg, eng = _engine()

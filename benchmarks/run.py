@@ -28,6 +28,12 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: cheap suites only (kernels, serve) "
                          "with shrunk workloads")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="regression gate: compare collected rows against a "
+                         "JSON baseline and exit 2 if any matching row "
+                         "regresses by more than 25%% (machine-speed "
+                         "normalized; rows whose derived string differs are "
+                         "skipped as incomparable workloads)")
     args = ap.parse_args(argv)
 
     import benchmarks.common
@@ -77,6 +83,64 @@ def main(argv=None) -> None:
         print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
+    if args.compare and compare_rows(collected, args.compare):
+        sys.exit(2)
+
+
+def compare_rows(collected: list, baseline_path: str) -> list:
+    """Gate collected rows against a baseline; returns the regressions.
+
+    A row is comparable when the baseline holds the same name AND the
+    same derived string (the derived text pins the workload — a smoke-
+    sized serve row must not be judged against the full-queue baseline).
+    Lower-is-better rows (us / ms suffixes) regress when they grow >25%
+    over baseline; throughput rows (tokens_per_s) when they shrink >25%.
+    Ratios are normalized by the median baseline/current speed ratio so a
+    uniformly slower CI box doesn't trip the gate — only a row that
+    regresses relative to the rest of the fleet does.
+    """
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in json.load(f)["rows"]}
+    pairs = []
+    for row in collected:
+        b = base.get(row["name"])
+        if (b is None or b.get("derived") != row["derived"]
+                or not isinstance(row["value"], (int, float))
+                or not isinstance(b["value"], (int, float))
+                or not b["value"] or not row["value"]):
+            continue
+        name = row["name"]
+        lower_better = name.endswith(".us") or name.endswith("_ms") \
+            or name.endswith(".ms")
+        higher_better = "per_s" in name
+        if not (lower_better or higher_better):
+            continue
+        # slowdown ratio > 1 means this row got slower than baseline
+        ratio = (row["value"] / b["value"] if lower_better
+                 else b["value"] / row["value"])
+        pairs.append((name, ratio))
+    if not pairs:
+        print(f"compare: no comparable rows in {baseline_path}",
+              file=sys.stderr)
+        return []
+    ratios = sorted(r for _, r in pairs)
+    mid = len(ratios) // 2                         # machine-speed median:
+    scale = (ratios[mid] if len(ratios) % 2        # a true median, so an
+             else (ratios[mid - 1] + ratios[mid]) / 2)  # even-count list
+    # can't adopt an upper-middle regression as the machine speed
+    # both tests must fail: the raw ratio (the row actually got slower)
+    # and the normalized one (slower than the fleet explains) — a row
+    # whose absolute time never grew is not a regression just because
+    # the CI box runs its neighbours faster
+    regressions = [(n, r, r / scale) for n, r in pairs
+                   if r > 1.25 and r / scale > 1.25]
+    for n, raw, rel in regressions:
+        print(f"REGRESSION {n}: {raw:.2f}x slower than baseline "
+              f"({rel:.2f}x after machine normalization)", file=sys.stderr)
+    if not regressions:
+        print(f"compare: {len(pairs)} rows within 25% of {baseline_path} "
+              f"(median speed ratio {scale:.2f})", file=sys.stderr)
+    return regressions
 
 
 if __name__ == "__main__":

@@ -67,7 +67,8 @@ def serve_steady_rows() -> list[tuple]:
     rows = [
         ("serve.tokens_per_s", toks / dt,
          f"{n_requests} reqs Poisson mix {lengths} max_new={max_new}"),
-        ("serve.drain_ms", dt * 1e3, "steady-state queue drain"),
+        ("serve.drain_ms", dt * 1e3,
+         f"steady-state drain, {n_requests} reqs max_new={max_new}"),
     ]
 
     # equal-length fast path at the same token budget, as the scale bar
@@ -80,4 +81,25 @@ def serve_steady_rows() -> list[tuple]:
     dt_eq = time.time() - t0
     rows.append(("serve.equal_len_tokens_per_s", toks / dt_eq,
                  f"{n_requests} equal-length reqs, single while_loop"))
+
+    # chunked prefill: a queue mixing short prompts with 128-bucket
+    # admissions that stage in 32-token segments between decode chunks
+    n_long = 4 if smoke else 12
+    long_lengths = (8, 16, 100, 128)
+    sched_long = ContinuousScheduler(
+        cfg, params, max_len=128 + max_new + 8,
+        sched=SchedulerConfig(buckets=(8, 16, 32, 64, 128), max_slots=8,
+                              prefill_group=4, chunk=4, prefill_segment=32))
+    rng2 = np.random.RandomState(2)
+    long_reqs = [Request(tokens=rng2.randint(0, cfg.vocab,
+                                             rng2.choice(long_lengths)),
+                         max_new_tokens=max_new) for _ in range(n_long)]
+    _drain_with_poisson_arrivals(sched_long, long_reqs,
+                                 np.random.RandomState(3), rate=2.0)
+    dt_long = _drain_with_poisson_arrivals(sched_long, long_reqs,
+                                           np.random.RandomState(3),
+                                           rate=2.0)
+    rows.append(("serve.chunked_prefill_tokens_per_s",
+                 n_long * max_new / dt_long,
+                 f"{n_long} reqs mix {long_lengths}, 32-token segments"))
     return rows

@@ -1,0 +1,41 @@
+"""Dense decode-attention oracle.
+
+This is the seed `decode_attention` math, verbatim: one float32 einsum of
+the (B, 1) query block against the full cache width, a masked softmax,
+and a second einsum against the values.  The paged paths must reproduce
+it — the blocked-jnp fallback bit-exactly (it runs the same dense math
+over a page-aligned prefix, and masked tail keys contribute exact zeros
+to every reduction), the Pallas kernel to float tolerance (online
+softmax re-orders the accumulation).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, attend_len) -> jnp.ndarray:
+    """q: (B, 1, Hq, D); k/v_cache: (B, S, Hkv, D); attend_len: () or (B,)
+    count of valid cache slots per row.  Returns (B, 1, Hq, D) in q.dtype.
+    """
+    B, _, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale      # (B,Hkv,G,1,S)
+    attend_len = jnp.asarray(attend_len)
+    if attend_len.ndim == 0:
+        valid = jnp.arange(S) < attend_len                   # broadcast over S
+    else:
+        valid = (jnp.arange(S)[None, :]
+                 < attend_len[:, None])[:, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -31,11 +31,14 @@ from repro.nn.attention import (
     cross_attention_apply,
     cross_attention_decode,
     cross_kv,
+    flash_attention,
+    project_qkv,
 )
 from repro.nn.linear import dense_apply, dense_init, embedding_apply, embedding_init
 from repro.nn.moe import moe_apply, moe_init
 from repro.nn.module import split_keys
 from repro.nn.norm import layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init
+from repro.nn.rope import apply_rope
 from repro.nn.ssm import (
     mamba_apply,
     mamba_decode_apply,
@@ -671,6 +674,76 @@ def prefill(cfg: ArchConfig, params, batch, *, long_context: bool = False,
     logits = (last.astype(jnp.float32)
               @ _readout_weight(cfg, params).astype(jnp.float32))
     return logits, caches, total_T
+
+
+def prefill_chunk(cfg: ArchConfig, params, tokens, cache, depth, *,
+                  attend_width: int, last_index=0):
+    """Advance a chunked prefill by one token segment.
+
+    tokens: (B, C) the next C prompt tokens (pad-extended past the prompt
+    tail); cache: k/v decode cache from `init_cache` whose rows [0, depth)
+    already hold the previous segments' keys; depth: () tokens already
+    prefilled (traced — one compiled program serves every segment of a
+    bucket).  Attention runs the segment's queries against the first
+    `attend_width` cache slots via `flash_attention(q_offset=depth)`, so
+    a row at absolute position depth+i sees exactly the keys a one-shot
+    prefill of the same padded width would show it — segment boundaries
+    cannot move a logit by one ULP.  Stale keys past depth+C are causally
+    masked (slot index == absolute position for a non-ring prefill).
+
+    Returns (logits (B, vocab) at segment row `last_index`, new cache).
+    Chunked prefill is attention-only, like bucketed prefill: recurrent
+    state would integrate pad tokens, and SWA rings compact slots away
+    from the slot==position layout this relies on.
+    """
+    assert (cfg.encdec is None and cfg.hybrid is None and cfg.xlstm is None
+            and cfg.vlm is None and cfg.moe is None and cfg.rope_theta > 0
+            and cfg.sliding_window == 0), \
+        f"{cfg.name}: chunked prefill needs a pure-attention dense-FFN " \
+        "RoPE decoder (MoE capacity couples rows across the segment)"
+    B, C = tokens.shape
+    assert attend_width <= cache["k"].shape[3], (attend_width, cache["k"].shape)
+    specs = sublayer_specs(cfg)
+    x = embedding_apply(params["embed"], tokens)
+    depth = jnp.asarray(depth, jnp.int32)
+    positions = depth + jnp.arange(C)[None, :]
+    hd = cfg.resolved_head_dim
+
+    def body(h, xs):
+        sb_params, cache_sb = xs
+        counters = {"attn": 0}
+        for spec, p in zip(specs, sb_params):
+            hn = _norm_apply(cfg, p["norm"], h)
+            i = counters["attn"]
+            q, k, v = project_qkv(p["attn"], hn, n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads, head_dim=hd)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache_sb["k"][i], k.astype(cache_sb["k"].dtype), depth,
+                axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache_sb["v"][i], v.astype(cache_sb["v"].dtype), depth,
+                axis=1)
+            cache_sb = dict(cache_sb)
+            cache_sb["k"] = cache_sb["k"].at[i].set(kc)
+            cache_sb["v"] = cache_sb["v"].at[i].set(vc)
+            counters["attn"] += 1
+            out = flash_attention(
+                q, jax.lax.slice_in_dim(kc, 0, attend_width, axis=1),
+                jax.lax.slice_in_dim(vc, 0, attend_width, axis=1),
+                causal=True, q_offset=depth)
+            h = h + dense_apply(p["attn"]["wo"],
+                                out.reshape(B, C, cfg.n_heads * hd))
+            h, _ = _apply_ffn(cfg, spec, p, h, dropless=True)
+        return h, cache_sb
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    last = x[jnp.arange(B), jnp.asarray(last_index)]
+    logits = (last.astype(jnp.float32)
+              @ _readout_weight(cfg, params).astype(jnp.float32))
+    return logits, new_cache
 
 
 def _ring_compact(kv, S: int, T: int):

@@ -18,6 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention.ops import paged_decode_attention
 from repro.nn import init as initializers
 from repro.nn.linear import dense_apply, dense_init
 from repro.nn.module import split_keys
@@ -160,24 +161,13 @@ def decode_attention(q, k_cache, v_cache, attend_len) -> jnp.ndarray:
     rows sit at different depths).  Ring buffers (SWA) pass attend_len ==
     S once full; slot order does not matter because keys carry absolute
     RoPE phases.  Returns (B, 1, Hq, D).
+
+    Caches whose width splits into KV pages route through the paged
+    subsystem (`repro.kernels.decode_attention`): only the pages below
+    max(attend_len) are visited, and the fallback path is bit-identical
+    to the dense einsum this function used to inline.
     """
-    B, _, Hq, D = q.shape
-    S, Hkv = k_cache.shape[1], k_cache.shape[2]
-    G = Hq // Hkv
-    scale = 1.0 / math.sqrt(D)
-    qg = q.reshape(B, 1, Hkv, G, D)
-    s = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
-                   k_cache.astype(jnp.float32)) * scale      # (B,Hkv,G,1,S)
-    attend_len = jnp.asarray(attend_len)
-    if attend_len.ndim == 0:
-        valid = jnp.arange(S) < attend_len                   # broadcast over S
-    else:
-        valid = (jnp.arange(S)[None, :]
-                 < attend_len[:, None])[:, None, None, None, :]
-    s = jnp.where(valid, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgts,bshd->bthgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+    return paged_decode_attention(q, k_cache, v_cache, attend_len)
 
 
 # ----------------------------------------------------------- full layer ----

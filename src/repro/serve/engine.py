@@ -131,6 +131,11 @@ class ServeEngine:
         self._loop = jax.jit(partial(_decode_loop, cfg),
                              static_argnames=("buf_len", "greedy"),
                              donate_argnums=donate)
+        # jit'd prefill (compiles once per prompt length): the op-by-op
+        # eager prefill used to dominate the equal-length path's wall
+        # clock, benching it below the scheduler on the same requests
+        self._prefill = jax.jit(partial(bb.prefill, cfg),
+                                static_argnames=("max_len",))
 
     @property
     def scheduler(self) -> ContinuousScheduler:
@@ -176,8 +181,9 @@ class ServeEngine:
             np.stack([r.tokens for r in requests]), jnp.int32)}
         batch.update(_stack_extras(requests))
 
-        logits, cache, total_T = bb.prefill(
-            self.cfg, self.params, batch, max_len=self.max_len)
+        logits, cache, total_T = self._prefill(self.params, batch,
+                                               max_len=self.max_len)
+        total_T = int(total_T)
         max_new = max(r.max_new_tokens for r in requests)
         assert max_new <= self.max_len, \
             f"max_new_tokens {max_new} exceeds engine max_len {self.max_len}"

@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler: bucketed prefill + slot-pool decode.
+"""Continuous-batching scheduler: bucketed prefill + paged slot-pool decode.
 
 The unit of work is a `Request` (see `repro.serve.engine`).  Admission
 right-pads each prompt to the smallest configured length bucket, runs one
@@ -11,10 +11,28 @@ compiled program serves every mix of requests.  Between segments the host
 and admits queued requests into the freed slots — the loop never
 recompiles and never drains.
 
+The slot-pool KV cache is *page granular*: prefill returns rows at the
+bucket's page-rounded width (`page_size`) instead of the full pool width,
+so injecting a request copies only the pages its prompt covers — slots
+keep whatever stale keys the previous occupant left past that point, and
+decode masks them out by depth (a cache slot only becomes attendable the
+step its row writes it).  `decode_step`'s attention visits only the KV
+pages below the pool's deepest live row (`repro.kernels.decode_attention`),
+so a wide pool costs what its occupancy costs, not its capacity.
+
+Long prompts admit through *chunked prefill*: a prompt whose bucket
+exceeds `prefill_segment` is staged one segment at a time between decode
+chunks (`backbone.prefill_chunk`, bit-identical to one-shot prefill), so
+a long admission can never stall the decode pool for more than one
+segment of prefill work.  One admission stages at a time; short groups
+keep admitting around it, and the staged slot joins the pool when its
+last segment lands.
+
 Correctness invariants (tested against one-request-at-a-time decode):
-  * pad keys are masked out of prefill attention and pad cache slots are
-    overwritten by decode writes before they become attendable, so bucket
-    padding never changes a request's tokens;
+  * pad keys are masked out of prefill attention and pad/stale cache
+    slots are overwritten by decode writes before they become
+    attendable, so neither bucket padding nor page-granular injects can
+    change a request's tokens;
   * batch rows are independent end-to-end, so evict/inject of one slot
     preserves every other slot's cache contents bit-for-bit.
 
@@ -28,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from functools import partial
 from typing import Optional
 
 import jax
@@ -35,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.kernels.common import round_up
 from repro.models import backbone as bb
 
 
@@ -44,6 +64,12 @@ class SchedulerConfig:
     max_slots: int = 8         # decode pool width (concurrent requests)
     prefill_group: int = 4     # fixed prefill batch (bounds compile count)
     chunk: int = 8             # decode steps per while_loop segment
+    page_size: int = 32        # KV copy granularity: injects move
+                               # ceil(bucket / page_size) pages, not the
+                               # full pool-width strip
+    prefill_segment: int = 64  # buckets above this prefill in segments of
+                               # this many tokens, interleaved with decode
+                               # chunks (0 disables chunked prefill)
 
 
 def supports_continuous_batching(cfg: ArchConfig) -> bool:
@@ -88,7 +114,17 @@ class ContinuousScheduler:
         self._key = jax.random.PRNGKey(seed)
         S = self.sched.max_slots
         L = max_len
-        cache = bb.init_cache(cfg, S, max_len)
+        # the pool's KV width is a power-of-two page count so decode
+        # attention always has a paged cache with a *dense* divisor
+        # ladder to early-exit over (a raw max_len like 152 would round
+        # to 160, whose only ladder widths are 32 and 160 — one deep row
+        # would force full-width attention); <2x memory, and requests
+        # still budget against max_len
+        page = self.sched.page_size
+        n_pages = 1 << max(1, (round_up(max_len, page) // page - 1)
+                           .bit_length())
+        self._kv_len = page * n_pages
+        cache = bb.init_cache(cfg, S, self._kv_len)
         assert set(cache) == {"k", "v"}, sorted(cache)
         self._pool = {
             "buf": jnp.zeros((S, L), jnp.int32),
@@ -103,14 +139,19 @@ class ContinuousScheduler:
         }
         self._slot_rid: list[Optional[int]] = [None] * S
         self._queue: deque = deque()           # (rid, Request)
+        self._staging: list[dict] = []         # chunked-prefill admissions
         self._results: dict[int, object] = {}
         self._next_rid = 0
 
-        def _prefill(params, tokens, lengths):
+        def _prefill(params, tokens, lengths, *, max_len):
             return bb.prefill(cfg, params, {"tokens": tokens},
                               max_len=max_len, lengths=lengths)
 
-        self._prefill = jax.jit(_prefill)      # compiles once per bucket
+        self._prefill = jax.jit(_prefill,      # compiles once per bucket
+                                static_argnames=("max_len",))
+        self._prefill_chunk = jax.jit(         # compiles once per bucket
+            partial(bb.prefill_chunk, cfg),
+            static_argnames=("attend_width",))
         self._inject = jax.jit(self._inject_impl)
         donate = (1,) if jax.default_backend() == "tpu" else ()
         self._chunk = jax.jit(self._chunk_impl, donate_argnums=donate)
@@ -125,6 +166,11 @@ class ContinuousScheduler:
         carry slot == max_slots and are dropped by the scatters.  The
         first token of each request is sampled here from the prefill
         logits, mirroring the equal-length engine loop.
+
+        rows arrive at the bucket's page-rounded width, so the cache
+        scatter copies only the pages the prompt covers; whatever the
+        slot's previous occupant left past that width stays in place and
+        is masked out of attention until a decode write overtakes it.
         """
         S, L = pool["buf"].shape
         tok0 = sample_tokens(logits0, temps, key)
@@ -135,10 +181,13 @@ class ContinuousScheduler:
         new["done"] = pool["done"].at[slots].set(
             (tok0 == eos) | (max_new <= 1), mode="drop")
         new["tok"] = pool["tok"].at[slots].set(tok0[:, None], mode="drop")
-        new["cache"] = jax.tree.map(
-            lambda leaf, r: leaf.at[:, :, slots].set(
-                r.astype(leaf.dtype), mode="drop"),
-            pool["cache"], rows)
+
+        def put_pages(leaf, r):
+            W = min(leaf.shape[3], r.shape[3])   # KV-axis capacities
+            return leaf.at[:, :, slots, :W].set(
+                r[:, :, :, :W].astype(leaf.dtype), mode="drop")
+
+        new["cache"] = jax.tree.map(put_pages, pool["cache"], rows)
         new["cache_len"] = pool["cache_len"].at[slots].set(
             prompt_lens, mode="drop")
         new["eos"] = pool["eos"].at[slots].set(eos, mode="drop")
@@ -168,9 +217,13 @@ class ContinuousScheduler:
             gen = pool["gen"] + run.astype(jnp.int32)
             done = pool["done"] | (run & ((t == pool["eos"])
                                           | (gen >= pool["max_new"])))
+            # only running rows advance their depth: done/free slots keep
+            # cache_len frozen (and evict resets it), so the paged decode
+            # kernel's max-depth branch tracks live occupancy, not the
+            # deepest slot the pool has ever held
             new = dict(pool, buf=buf, gen=gen, done=done, cache=cache,
                        tok=jnp.where(run[:, None], t[:, None], pool["tok"]),
-                       cache_len=pool["cache_len"] + 1)
+                       cache_len=pool["cache_len"] + run.astype(jnp.int32))
             return step + 1, new, key
 
         _, pool, key = jax.lax.while_loop(
@@ -202,24 +255,57 @@ class ContinuousScheduler:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self._slot_rid) if r is None]
 
+    def _staging_slots(self) -> set:
+        return {st["slot"] for st in self._staging}
+
+    def _copy_width(self, bucket: int) -> int:
+        """Token width of the cache rows an admission copies into the
+        pool: the bucket rounded up to whole pages (never the full pool
+        width)."""
+        return min(self._kv_len, round_up(bucket, self.sched.page_size))
+
+    def _is_long(self, req) -> bool:
+        seg = self.sched.prefill_segment
+        return bool(seg) and self._bucket_of(len(req.tokens)) > seg
+
     def _admit(self) -> bool:
-        """Admit one bucket group from the queue head into free slots.
+        """Admit one bucket group — or start one chunked prefill — from
+        the queue head into free slots.
 
         Groups are formed in FIFO order keyed by the head request's
         bucket, so the queue head is always in the next group — no
-        request can be starved by a stream of other-bucket arrivals."""
+        request can be starved by a stream of other-bucket arrivals.  A
+        long head (bucket > prefill_segment) claims a slot and stages
+        instead; while a staging is already in flight the head's wait is
+        bounded by its remaining segments, and the first short group
+        behind it keeps the pool fed."""
         free = self._free_slots()
         if not free or not self._queue:
             return False
+        head_rid, head_req = self._queue[0]
+        if self._is_long(head_req):
+            if not self._staging:
+                self._queue.popleft()
+                self._start_staging(head_rid, head_req, free[0])
+                return True
+            shorts = [(r, q) for r, q in self._queue
+                      if not self._is_long(q)]
+            if not shorts:
+                return False
+            head_bucket = self._bucket_of(len(shorts[0][1].tokens))
+        else:
+            head_bucket = self._bucket_of(len(head_req.tokens))
+
         G = self.sched.prefill_group
-        head_bucket = self._bucket_of(len(self._queue[0][1].tokens))
         take, keep = [], deque()
         for rid, req in self._queue:
-            if (len(take) < min(len(free), G)
+            if (len(take) < min(len(free), G) and not self._is_long(req)
                     and self._bucket_of(len(req.tokens)) == head_bucket):
                 take.append((rid, req))
             else:
                 keep.append((rid, req))
+        if not take:
+            return False
         self._queue = keep
 
         tokens = np.zeros((G, head_bucket), np.int32)
@@ -238,8 +324,9 @@ class ContinuousScheduler:
             temps[g] = req.temperature
             self._slot_rid[slot] = rid
 
-        logits0, rows, _ = self._prefill(self.params, jnp.asarray(tokens),
-                                         jnp.asarray(lengths))
+        logits0, rows, _ = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            max_len=self._copy_width(head_bucket))
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
             self._pool, jnp.asarray(slots), rows, logits0,
@@ -247,16 +334,75 @@ class ContinuousScheduler:
             jnp.asarray(temps), sub)
         return True
 
+    # ------------------------------------------------- chunked prefill --
+
+    def _start_staging(self, rid: int, req, slot: int) -> None:
+        """Claim a slot for a long admission; its prompt prefills one
+        `prefill_segment`-token slice per scheduling round."""
+        seg = self.sched.prefill_segment
+        bucket = self._bucket_of(len(req.tokens))
+        T = len(req.tokens)
+        n_segs = round_up(bucket, seg) // seg
+        toks = np.zeros((n_segs * seg,), np.int32)
+        toks[:T] = np.asarray(req.tokens, np.int32)
+        self._slot_rid[slot] = rid
+        self._staging.append({
+            "rid": rid, "req": req, "slot": slot, "depth": 0, "T": T,
+            "bucket": bucket, "tokens": toks, "logits0": None,
+            # staging cache width: whole segments covering the bucket, so
+            # every segment's K/V write lands without clamping
+            "cache": bb.init_cache(self.cfg, 1, n_segs * seg),
+        })
+
+    def _advance_staging(self) -> None:
+        """Run one prefill segment for the staged admission (if any).
+        Attention spans the bucket width at every segment, which keeps
+        the staged rows bit-identical to a one-shot bucketed prefill;
+        segments stop once the prompt tail has landed."""
+        if not self._staging:
+            return
+        st = self._staging[0]
+        seg = self.sched.prefill_segment
+        d = st["depth"]
+        toks = jnp.asarray(st["tokens"][None, d:d + seg])
+        last = min(max(st["T"] - 1 - d, 0), seg - 1)
+        logits, st["cache"] = self._prefill_chunk(
+            self.params, toks, st["cache"], jnp.int32(d),
+            attend_width=st["bucket"], last_index=jnp.int32(last))
+        if d <= st["T"] - 1 < d + seg:
+            st["logits0"] = logits          # segment holding the last token
+        st["depth"] = d + seg
+        if st["depth"] >= st["T"]:
+            self._staging.remove(st)
+            self._finish_staging(st)
+
+    def _finish_staging(self, st: dict) -> None:
+        """The staged cache joins the pool through the same page-granular
+        inject as one-shot admissions (first token sampled in-graph)."""
+        req = st["req"]
+        self._key, sub = jax.random.split(self._key)
+        self._pool = self._inject(
+            self._pool, jnp.asarray([st["slot"]]), st["cache"],
+            st["logits0"], jnp.asarray([st["T"]], jnp.int32),
+            jnp.asarray([req.eos_id], jnp.int32),
+            jnp.asarray([req.max_new_tokens], jnp.int32),
+            jnp.asarray([req.temperature], jnp.float32), sub)
+
+    # ----------------------------------------------------------- loop --
+
     def _active_mask(self) -> jnp.ndarray:
-        return jnp.asarray(
-            np.asarray([r is not None for r in self._slot_rid]))
+        stag = self._staging_slots()
+        return jnp.asarray(np.asarray(
+            [r is not None and i not in stag
+             for i, r in enumerate(self._slot_rid)]))
 
     def _drain(self) -> list[int]:
         """Evict finished slots: one host copy of buf/gen per segment."""
         from repro.serve.engine import Completion
         done = np.asarray(self._pool["done"])
+        stag = self._staging_slots()
         fin = [i for i, rid in enumerate(self._slot_rid)
-               if rid is not None and done[i]]
+               if rid is not None and done[i] and i not in stag]
         if not fin:
             return []
         buf = np.asarray(self._pool["buf"])
@@ -268,14 +414,22 @@ class ContinuousScheduler:
                 buf[i, :gen[i]].astype(np.int32), int(gen[i]))
             self._slot_rid[i] = None
             out.append(rid)
+        # freed slots drop to depth 0 so the paged decode kernel's
+        # max-depth branch follows live occupancy
+        self._pool["cache_len"] = (
+            self._pool["cache_len"].at[jnp.asarray(fin)].set(0))
         return out
 
     def step(self) -> list[int]:
-        """One scheduling round: admit groups while slots are free, decode
-        one chunk, evict what finished.  Returns completed request ids."""
+        """One scheduling round: advance the staged prefill a segment,
+        admit groups while slots are free, decode one chunk, evict what
+        finished.  Returns completed request ids."""
+        self._advance_staging()
         while self._admit():
             pass
-        if not any(r is not None for r in self._slot_rid):
+        stag = self._staging_slots()
+        if not any(r is not None and i not in stag
+                   for i, r in enumerate(self._slot_rid)):
             return []
         self._key, sub = jax.random.split(self._key)
         self._pool, _ = self._chunk(self.params, self._pool,
@@ -285,7 +439,8 @@ class ContinuousScheduler:
 
     def run(self) -> dict:
         """Drain queue and pool; returns (and forgets) {rid: Completion}."""
-        while self._queue or any(r is not None for r in self._slot_rid):
+        while (self._queue or self._staging
+               or any(r is not None for r in self._slot_rid)):
             self.step()
         out, self._results = self._results, {}
         return out

@@ -1,0 +1,77 @@
+"""The --compare regression gate: machine-normalized, workload-pinned."""
+import json
+
+from benchmarks.run import compare_rows
+
+
+def _baseline(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"suites": ["kernels"], "rows": [
+        {"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+        {"name": "kernel.b.us", "value": 100.0, "derived": "x"},
+        {"name": "serve.c_tokens_per_s", "value": 50.0, "derived": "w"},
+    ]}))
+    return str(p)
+
+
+def test_uniform_slowdown_is_machine_speed_not_regression(tmp_path):
+    rows = [{"name": "kernel.a.us", "value": 200.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 200.0, "derived": "x"},
+            {"name": "serve.c_tokens_per_s", "value": 25.0, "derived": "w"}]
+    assert compare_rows(rows, _baseline(tmp_path)) == []
+
+
+def test_single_row_regression_detected(tmp_path):
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 300.0, "derived": "x"},
+            {"name": "serve.c_tokens_per_s", "value": 50.0, "derived": "w"}]
+    regs = compare_rows(rows, _baseline(tmp_path))
+    assert [r[0] for r in regs] == ["kernel.b.us"]
+
+
+def test_throughput_drop_detected(tmp_path):
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 100.0, "derived": "x"},
+            {"name": "serve.c_tokens_per_s", "value": 10.0, "derived": "w"}]
+    regs = compare_rows(rows, _baseline(tmp_path))
+    assert [r[0] for r in regs] == ["serve.c_tokens_per_s"]
+
+
+def test_changed_workload_rows_are_skipped(tmp_path):
+    """A smoke-sized run (different derived string) must not be judged
+    against the full-queue baseline."""
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 900.0, "derived": "smoke"},
+            {"name": "serve.c_tokens_per_s", "value": 50.0, "derived": "w"}]
+    assert compare_rows(rows, _baseline(tmp_path)) == []
+
+
+def test_even_row_count_cannot_mask_regression(tmp_path):
+    """With an even comparable-row count, a slow row in the upper middle
+    must not be adopted as the machine speed (true median, not
+    upper-middle element)."""
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"suites": [], "rows": [
+        {"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+        {"name": "kernel.b.us", "value": 100.0, "derived": "x"},
+    ]}))
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 300.0, "derived": "x"}]
+    regs = compare_rows(rows, str(p))
+    assert [r[0] for r in regs] == ["kernel.b.us"]
+
+
+def test_relative_only_slowdown_is_not_a_regression(tmp_path):
+    """A row whose absolute time never grew must not fail just because
+    its neighbours sped up more on this box (raw AND normalized ratio
+    must both exceed the threshold)."""
+    rows = [{"name": "kernel.a.us", "value": 50.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 100.0, "derived": "x"},
+            {"name": "serve.c_tokens_per_s", "value": 100.0, "derived": "w"}]
+    assert compare_rows(rows, _baseline(tmp_path)) == []
+
+
+def test_unknown_rows_are_ignored(tmp_path):
+    rows = [{"name": "kernel.new_row.us", "value": 5.0, "derived": "y"},
+            {"name": "kernel.errored", "value": "ERROR", "derived": ""}]
+    assert compare_rows(rows, _baseline(tmp_path)) == []

@@ -1,0 +1,62 @@
+"""Offload-gateway benchmark: a 32-client mixed-link fleet end to end.
+
+Two fleet runs share one workload (32 clients round-robined over WiFi /
+narrowband / lossy-WiFi links, 6 inferences each, pool width 8): a
+static-rate run and an adaptive run against a 30 ms SLO.  The latency and
+energy rows are *deterministic* outputs of the seeded simulation — the
+``--compare`` gate matches them at ratio ~1.0 on any machine and only
+moves when the subsystem's semantics change — while ``clients_per_s`` is
+the wall-clock throughput of the real pipeline (payload codecs, event
+loop, batched Remote-NN calls).  The workload is pinned (no --smoke
+shrink) so smoke rows stay comparable to the committed baseline.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def gateway_rows() -> list[tuple]:
+    from repro.configs.agilenn_cifar import gateway_demo_config
+    from repro.core.agile import init_agile_params
+    from repro.serve.gateway import (
+        Fleet, GatewayConfig, OffloadGateway, mixed_fleet)
+
+    cfg = gateway_demo_config()
+    params = init_agile_params(cfg, jax.random.PRNGKey(0))
+    gw = GatewayConfig(batch_width=8)
+    pin = "32 clients mixed links x6 reqs W=8"
+
+    def fresh(slo_ms):
+        specs = mixed_fleet(32, n_requests=6, slo_ms=slo_ms)
+        return Fleet(cfg, params, specs, seed=0)
+
+    # warm-up run pays the device-pass + remote-step compiles; the best
+    # of two timed runs measures the steady pipeline (min-of-N, like
+    # timed_us: load only ever adds time, and the latency/energy rows
+    # are deterministic so either run yields the same values)
+    OffloadGateway(cfg, params, fresh(None), gw).run()
+    report = OffloadGateway(cfg, params, fresh(None), gw).run()
+    second = OffloadGateway(cfg, params, fresh(None), gw).run()
+    report.wall_s = min(report.wall_s, second.wall_s)
+    rows = [
+        ("gateway.e2e_latency_p50_ms", report.latency_percentile_ms(50),
+         f"{pin} static, simulated"),
+        ("gateway.e2e_latency_p99_ms", report.latency_percentile_ms(99),
+         f"{pin} static, simulated"),
+        ("gateway.device_energy_mj", report.device_energy_mj,
+         f"{pin} static, simulated"),
+        ("gateway.clients_per_s", report.clients_per_s,
+         f"{pin} static, wall-clock"),
+    ]
+
+    adaptive = OffloadGateway(cfg, params, fresh(30.0), gw).run()
+    rows.append(("gateway.adaptive_e2e_latency_p99_ms",
+                 adaptive.latency_percentile_ms(99),
+                 f"{pin} SLO=30ms, simulated"))
+    rows.append(("gateway.adaptive_payload_bytes",
+                 adaptive.summary()["payload_bytes_mean"],
+                 f"{pin} SLO=30ms, simulated"))
+    rows.append(("gateway.adaptive_device_energy_mj",
+                 adaptive.device_energy_mj,
+                 f"{pin} SLO=30ms, simulated"))
+    return rows

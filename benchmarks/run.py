@@ -22,12 +22,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
-                         "kernels, serve, roofline)")
+                         "kernels, serve, gateway, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run: cheap suites only (kernels, serve) "
-                         "with shrunk workloads")
+                    help="CI-sized run: cheap suites only (kernels, serve, "
+                         "gateway) with shrunk workloads")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="regression gate: compare collected rows against a "
                          "JSON baseline and exit 2 if any matching row "
@@ -41,6 +41,7 @@ def main(argv=None) -> None:
         benchmarks.common.SMOKE = True
 
     from benchmarks.ablations import ABLATIONS
+    from benchmarks.gateway import gateway_rows
     from benchmarks.kernel_micro import kernel_micro_rows
     from benchmarks.paper_figures import ALL_FIGURES
     from benchmarks.roofline_table import roofline_rows
@@ -50,12 +51,13 @@ def main(argv=None) -> None:
     suites.update(ABLATIONS)
     suites["kernels"] = kernel_micro_rows
     suites["serve"] = serve_steady_rows
+    suites["gateway"] = gateway_rows
     suites["roofline"] = roofline_rows
 
     if args.only:
         selected = args.only.split(",")
     elif args.smoke:
-        selected = ["kernels", "serve"]
+        selected = ["kernels", "serve", "gateway"]
     else:
         selected = list(suites)
     print("name,value,derived")
@@ -95,9 +97,15 @@ def compare_rows(collected: list, baseline_path: str) -> list:
     sized serve row must not be judged against the full-queue baseline).
     Lower-is-better rows (us / ms suffixes) regress when they grow >25%
     over baseline; throughput rows (tokens_per_s) when they shrink >25%.
-    Ratios are normalized by the median baseline/current speed ratio so a
-    uniformly slower CI box doesn't trip the gate — only a row that
-    regresses relative to the rest of the fleet does.
+    Wall-clock ratios are normalized by their median baseline/current
+    speed ratio so a uniformly slower CI box doesn't trip the gate —
+    only a row that regresses relative to the rest of the fleet does.
+    Rows whose derived string ends in "simulated" are deterministic
+    model outputs (the gateway's seeded fleet): machine speed cannot
+    move them, so they are excluded from the median and gated
+    symmetrically on their raw ratio — a >25% drift in EITHER direction
+    is a semantic change to the simulation (an intentional one ships a
+    regenerated baseline).
     """
     with open(baseline_path) as f:
         base = {r["name"]: r for r in json.load(f)["rows"]}
@@ -113,27 +121,35 @@ def compare_rows(collected: list, baseline_path: str) -> list:
         lower_better = name.endswith(".us") or name.endswith("_ms") \
             or name.endswith(".ms")
         higher_better = "per_s" in name
-        if not (lower_better or higher_better):
+        deterministic = str(row["derived"]).endswith("simulated")
+        if deterministic:
+            # any drift is semantic: direction doesn't matter
+            ratio = max(row["value"] / b["value"],
+                        b["value"] / row["value"])
+        elif lower_better or higher_better:
+            # slowdown ratio > 1 means this row got slower than baseline
+            ratio = (row["value"] / b["value"] if lower_better
+                     else b["value"] / row["value"])
+        else:
             continue
-        # slowdown ratio > 1 means this row got slower than baseline
-        ratio = (row["value"] / b["value"] if lower_better
-                 else b["value"] / row["value"])
-        pairs.append((name, ratio))
+        pairs.append((name, ratio, deterministic))
     if not pairs:
         print(f"compare: no comparable rows in {baseline_path}",
               file=sys.stderr)
         return []
-    ratios = sorted(r for _, r in pairs)
-    mid = len(ratios) // 2                         # machine-speed median:
-    scale = (ratios[mid] if len(ratios) % 2        # a true median, so an
-             else (ratios[mid - 1] + ratios[mid]) / 2)  # even-count list
+    walls = sorted(r for _, r, det in pairs if not det) \
+        or sorted(r for _, r, _ in pairs)
+    mid = len(walls) // 2                          # machine-speed median:
+    scale = (walls[mid] if len(walls) % 2          # a true median, so an
+             else (walls[mid - 1] + walls[mid]) / 2)    # even-count list
     # can't adopt an upper-middle regression as the machine speed
-    # both tests must fail: the raw ratio (the row actually got slower)
-    # and the normalized one (slower than the fleet explains) — a row
-    # whose absolute time never grew is not a regression just because
-    # the CI box runs its neighbours faster
-    regressions = [(n, r, r / scale) for n, r in pairs
-                   if r > 1.25 and r / scale > 1.25]
+    # wall-clock rows must fail both tests: the raw ratio (the row
+    # actually got slower) and the normalized one (slower than the fleet
+    # explains) — a row whose absolute time never grew is not a
+    # regression just because the CI box runs its neighbours faster.
+    # deterministic rows fail on raw ratio alone.
+    regressions = [(n, r, r if det else r / scale) for n, r, det in pairs
+                   if r > 1.25 and (det or r / scale > 1.25)]
     for n, raw, rel in regressions:
         print(f"REGRESSION {n}: {raw:.2f}x slower than baseline "
               f"({rel:.2f}x after machine normalization)", file=sys.stderr)

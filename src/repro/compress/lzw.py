@@ -95,6 +95,36 @@ def pack_indices(idx: np.ndarray, bits: int) -> bytes:
     return np.packbits(bitstream.ravel()).tobytes()
 
 
+def unpack_indices(data: bytes, bits: int, count: int) -> np.ndarray:
+    """Inverse of ``pack_indices``: the first `count` indices of a packed
+    payload (trailing pad bits from the byte-boundary framing are
+    discarded)."""
+    buf = np.frombuffer(data, np.uint8)
+    if bits == 8:
+        return buf[:count].astype(np.int32)
+    bitstream = np.unpackbits(buf)[:count * bits].reshape(count, bits)
+    weights = (1 << np.arange(bits - 1, -1, -1)).astype(np.int32)
+    return bitstream.astype(np.int32) @ weights
+
+
+def unpack_indices_batch(payloads: list[bytes], bits: int,
+                         count: int) -> np.ndarray:
+    """Decode a batch of equal-framing payloads in one vectorized pass.
+
+    Every payload packs exactly `count` indices at `bits` bits (the
+    gateway groups arrivals by framing before decoding).  Returns a
+    (B, count) int32 array, row-identical to per-payload
+    ``unpack_indices``."""
+    buf = np.frombuffer(b"".join(payloads), np.uint8)
+    buf = buf.reshape(len(payloads), -1)
+    if bits == 8:
+        return buf[:, :count].astype(np.int32)
+    bitstream = np.unpackbits(buf, axis=1)[:, :count * bits]
+    bitstream = bitstream.reshape(len(payloads), count, bits)
+    weights = (1 << np.arange(bits - 1, -1, -1)).astype(np.int32)
+    return bitstream.astype(np.int32) @ weights
+
+
 def pack_indices_batch(idx: np.ndarray, bits: int) -> list[bytes]:
     """Bit-pack a whole batch in one vectorized pass.
 

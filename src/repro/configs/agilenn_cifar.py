@@ -31,3 +31,14 @@ class AgileNNConfig:
     mcu_hz: float = 216e6          # STM32F746 Cortex-M7
     link_bps: float = 6e6          # ESP-WROOM WiFi, UDP 6 Mbps
     mcu_macs_per_cycle: float = 1.0  # CMSIS-NN int8 MAC throughput (approx)
+
+
+def gateway_demo_config() -> AgileNNConfig:
+    """The CPU-sized AgileNN system shared by every offload-gateway demo
+    surface (launch --gateway, benchmarks/gateway.py,
+    examples/gateway_demo.py) — one definition so the CLI, the example
+    and the benchmark baseline cannot silently diverge."""
+    return AgileNNConfig(image_size=16, remote_width=16, remote_blocks=2,
+                         reference_width=16, reference_blocks=2,
+                         agile=AgileSpec(enabled=True, extractor_channels=24,
+                                         k=5, rho=0.8, lam=0.3, ig_steps=2))

@@ -175,6 +175,78 @@ def agile_loss(cfg: AgileNNConfig, params, ref_params, images, labels, *,
     return total, metrics
 
 
+def device_forward(cfg: AgileNNConfig, params, images, *, use_fused: bool = True):
+    """The device half of the deployment pipeline, batched.
+
+    Runs extractor -> fused permute/split/quantize -> Local NN for a whole
+    batch of images WITHOUT touching the Remote-NN weights (which live on
+    the gateway side of the link).  Returns
+    (local_logits (B, n_classes), f_remote (B, H, W, C-k), idx) where
+    ``idx`` are the full-codebook quantization indices the static offload
+    configuration transmits and ``f_remote`` the pre-quantization remote
+    features an adaptive rate controller re-quantizes at reduced bit
+    widths.  Bit-identical to the device-side tensors of `agile_forward`'s
+    deployment path (the offload gateway's parity anchor)."""
+    perm = _static_perm(params["mapping"]) if use_fused else None
+    if perm is not None:
+        raw = extractor_apply(params["extractor"], images)
+        f_local, f_remote, idx, _ = fused_offload(
+            raw, params["quant"]["centers"], perm=perm, k=cfg.agile.k)
+    else:
+        feats = extract_features(cfg, params, images)
+        f_local, f_remote = split_features(feats, cfg.agile.k)
+        idx = hard_indices(params["quant"], f_remote)
+    local_logits = local_nn_apply(params["local"], f_local)
+    return local_logits, f_remote, idx
+
+
+@partial(jax.jit, static_argnames=("perm", "k"))
+def _device_forward_jit(params, images, *, perm: tuple, k: int):
+    raw = extractor_apply(params["extractor"], images)
+    f_local, f_remote, idx, _ = fused_offload(
+        raw, params["quant"]["centers"], perm=perm, k=k)
+    return local_nn_apply(params["local"], f_local), f_remote, idx
+
+
+def device_forward_fn(cfg: AgileNNConfig, params) -> Callable:
+    """Jit-compiled `device_forward` with the deployed channel
+    permutation folded in as a static constant (the fleet's batched
+    device pass: one compiled program for any fleet-wide image batch,
+    cached module-wide so repeated fleet builds don't recompile).
+
+    `params["mapping"]` must be concrete — inside a jit the mapping is a
+    tracer and the fused one-pass kernel could not be selected."""
+    perm = _static_perm(params["mapping"])
+    assert perm is not None, "device_forward_fn needs a concrete mapping"
+    return partial(_device_forward_jit, perm=perm, k=cfg.agile.k)
+
+
+def remote_forward(cfg: AgileNNConfig, params, f_remote_q, local_logits, *,
+                   alpha_override=None):
+    """The gateway/server half: Remote NN over dequantized offloaded
+    features + alpha-combine with the device's Local-NN logits.
+
+    Composing `device_forward` -> dequantize -> `remote_forward` is
+    bit-identical to `agile_forward(train=False)` (the gateway jits this
+    function once per feature-batch shape)."""
+    remote_logits = remote_nn_apply(params["remote"], f_remote_q)
+    return combine_predictions(params["combiner"], local_logits, remote_logits,
+                               temperature=cfg.agile.alpha_temperature,
+                               alpha_override=alpha_override)
+
+
+@partial(jax.jit, static_argnames=("temperature",))
+def remote_forward_jit(params, f_remote_q, local_logits, *,
+                       temperature: float):
+    """Module-level compiled `remote_forward` (one compile per
+    (batch shape, temperature) shared across every gateway instance —
+    a per-instance `jax.jit` closure would re-trace and re-compile for
+    each fleet run)."""
+    remote_logits = remote_nn_apply(params["remote"], f_remote_q)
+    return combine_predictions(params["combiner"], local_logits,
+                               remote_logits, temperature=temperature)
+
+
 def agile_predict(cfg: AgileNNConfig, params, images, *, alpha_override=None):
     """Deployment-path prediction (hard quantization)."""
     logits, internals = agile_forward(cfg, params, images, train=False,

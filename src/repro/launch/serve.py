@@ -1,9 +1,12 @@
-"""Production serving launcher: prefill + decode loop for an architecture.
+"""Production serving launcher: prefill + decode loop for an architecture,
+or a multi-client offload-gateway fleet run.
 
   python -m repro.launch.serve --arch mixtral-8x7b --shape decode_32k --dry-run
   python -m repro.launch.serve --arch qwen2-0.5b --local --tokens 8
   python -m repro.launch.serve --arch qwen2-0.5b --local --queue 24 \
       --lengths 8,16,32            # continuous-batching scheduler
+  python -m repro.launch.serve --gateway 32 --requests 4 \
+      --slo-ms 40                  # simulated weak-device fleet -> gateway
 """
 from __future__ import annotations
 
@@ -35,9 +38,33 @@ def _serve_queue(cfg, params, args) -> int:
     return 0
 
 
+def _serve_gateway(args) -> int:
+    """Drive a simulated weak-device fleet through the offload gateway."""
+    import jax
+    from repro.configs.agilenn_cifar import gateway_demo_config
+    from repro.core.agile import init_agile_params
+    from repro.serve.gateway import (
+        Fleet, GatewayConfig, OffloadGateway, mixed_fleet)
+
+    cfg = gateway_demo_config()
+    params = init_agile_params(cfg, jax.random.PRNGKey(0))
+    specs = mixed_fleet(args.gateway, n_requests=args.requests,
+                        slo_ms=args.slo_ms)
+    fleet = Fleet(cfg, params, specs, seed=0)
+    report = OffloadGateway(
+        cfg, params, fleet, GatewayConfig(batch_width=args.batch_width)).run()
+    mode = ("static rate" if args.slo_ms is None
+            else f"adaptive rate, SLO {args.slo_ms:g} ms")
+    print(f"gateway: {args.gateway} clients x {args.requests} reqs "
+          f"({mode}), pool width {args.batch_width}")
+    for k, v in report.summary().items():
+        print(f"  {k}: {v}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dry-run", action="store_true")
@@ -48,7 +75,22 @@ def main(argv=None) -> int:
                          "continuous-batching scheduler")
     ap.add_argument("--lengths", default="8,16,32",
                     help="comma-separated prompt-length mix for --queue")
+    ap.add_argument("--gateway", type=int, default=0, metavar="N",
+                    help="simulate N weak-device clients through the "
+                         "multi-client offload gateway")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="inferences per gateway client")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-client latency SLO enabling adaptive rate "
+                         "control (default: static configuration)")
+    ap.add_argument("--batch-width", type=int, default=8,
+                    help="gateway Remote-NN feature slot pool width")
     args = ap.parse_args(argv)
+
+    if args.gateway:
+        return _serve_gateway(args)
+    if args.arch is None:
+        ap.error("--arch is required (unless --gateway N is given)")
 
     if args.dry_run:
         from repro.launch import dryrun

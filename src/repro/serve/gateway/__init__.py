@@ -1,0 +1,28 @@
+"""Multi-client offload gateway: a fleet of simulated weak devices
+driving the batched Remote-NN serving path end-to-end over lossy links.
+
+  fleet   = Fleet(cfg, params, mixed_fleet(32), seed=0)
+  report  = OffloadGateway(cfg, params, fleet).run()
+  print(report.summary())
+"""
+from repro.serve.gateway.channel import (
+    LOSSY_WIFI, NARROWBAND, WIFI_UDP, Channel, ChannelConfig, Delivery,
+)
+from repro.serve.gateway.control import (
+    RateController, RateProfile, default_ladder, requantize, subset_centers,
+)
+from repro.serve.gateway.fleet import (
+    ClientSpec, DeviceClient, Fleet, Payload, mixed_fleet,
+)
+from repro.serve.gateway.gateway import (
+    GatewayConfig, GatewayReport, OffloadGateway, RequestTrace,
+)
+
+__all__ = [
+    "Channel", "ChannelConfig", "Delivery",
+    "WIFI_UDP", "NARROWBAND", "LOSSY_WIFI",
+    "RateController", "RateProfile", "default_ladder", "requantize",
+    "subset_centers",
+    "ClientSpec", "DeviceClient", "Fleet", "Payload", "mixed_fleet",
+    "GatewayConfig", "GatewayReport", "OffloadGateway", "RequestTrace",
+]

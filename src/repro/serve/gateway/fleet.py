@@ -1,0 +1,163 @@
+"""A simulated fleet of weak devices running the AgileNN local path.
+
+Each client owns a seeded Poisson arrival process, a link (`Channel`), a
+rate controller and a slice of a fleet-wide synthetic request stream.
+The device half of the pipeline (extractor -> fused top-k split/quantize
+-> Local NN) runs *batched across the whole fleet* in one compiled call
+(`core.agile.device_forward_fn`) when the fleet is built; what remains per
+request at simulation time is host-side work the MCU would also do per
+inference: profile-dependent bit-pack + LZW of the quantization indices,
+and the device/channel timing bookkeeping.
+
+Compute and transmit timestamps come from the `DeviceModel` cost model
+(STM32F746-class MCU), with each client's link bandwidth taken from its
+channel, so one fleet can mix WiFi and narrowband devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.lzw import compress_payload, pack_indices
+from repro.compress.quantize import quantization_bits
+from repro.configs.agilenn_cifar import AgileNNConfig
+from repro.core.agile import device_forward_fn
+from repro.data.synthetic import ImageDatasetSpec, SyntheticImages
+from repro.serve.device_model import DeviceModel
+from repro.serve.gateway.channel import (
+    WIFI_UDP, NARROWBAND, LOSSY_WIFI, Channel, ChannelConfig,
+)
+from repro.serve.gateway.control import (
+    RateController, default_ladder, requantize, subset_centers,
+)
+from repro.serve.offload import local_path_macs, remote_nn_macs
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSpec:
+    channel: ChannelConfig = WIFI_UDP
+    arrival_rate_hz: float = 25.0      # Poisson inference arrivals
+    n_requests: int = 4
+    slo_ms: "float | None" = None      # None => static configuration
+
+
+def mixed_fleet(n_clients: int, *, n_requests: int = 4,
+                arrival_rate_hz: float = 25.0,
+                channels: tuple[ChannelConfig, ...] = (
+                    WIFI_UDP, NARROWBAND, LOSSY_WIFI),
+                slo_ms: "float | None" = None) -> tuple[ClientSpec, ...]:
+    """Round-robin mix of link types across the fleet."""
+    return tuple(ClientSpec(channel=channels[i % len(channels)],
+                            arrival_rate_hz=arrival_rate_hz,
+                            n_requests=n_requests, slo_ms=slo_ms)
+                 for i in range(n_clients))
+
+
+@dataclasses.dataclass
+class Payload:
+    """One radio frame: LZW-compressed bit-packed quantization indices.
+
+    ``bits``/``keep``/``count`` describe the framing (in a real system a
+    one-byte header; accounted as free here); ``codes`` is the LZW code
+    stream actually on the air — the gateway's decode recovers the
+    bit-packed indices from it."""
+    client: int
+    req: int
+    bits: int
+    keep: int            # transmitted remote channels (importance prefix)
+    count: int           # packed index count = feat_hw^2 * keep
+    nbytes: int          # radio bytes after LZW
+    codes: list
+
+
+class DeviceClient:
+    """Host-side state of one simulated device."""
+
+    def __init__(self, index: int, spec: ClientSpec, cfg: AgileNNConfig,
+                 row0: int, ladder, seed: int):
+        self.index = index
+        self.spec = spec
+        self.row0 = row0
+        self.device = DeviceModel(cpu_hz=cfg.mcu_hz,
+                                  link_bps=spec.channel.bandwidth_bps,
+                                  macs_per_cycle=cfg.mcu_macs_per_cycle)
+        self.channel = Channel(spec.channel, seed=seed + 1)
+        slo_s = None if spec.slo_ms is None else spec.slo_ms * 1e-3
+        self.controller = RateController(ladder, slo_s)
+        rng = np.random.RandomState(seed)
+        self.born = np.cumsum(rng.exponential(
+            1.0 / spec.arrival_rate_hz, spec.n_requests))
+
+
+class Fleet:
+    """The device side of the gateway simulation, batched where the math
+    is heavy and per-request where the radio framing is."""
+
+    def __init__(self, cfg: AgileNNConfig, params,
+                 specs: tuple[ClientSpec, ...], *, seed: int = 0):
+        assert specs, "empty fleet"
+        self.cfg = cfg
+        self.params = params
+        self.seed = seed
+        feat_hw = cfg.image_size // (2 ** cfg.extractor_layers)
+        self.feat_hw = feat_hw
+        self.n_remote = cfg.extractor_channels - cfg.agile.k
+        self.local_macs = local_path_macs(cfg, feat_hw)
+        self.remote_macs = remote_nn_macs(cfg, feat_hw)
+
+        centers = np.asarray(params["quant"]["centers"], np.float32)
+        self.full_bits = quantization_bits(centers.shape[0])
+        self._centers = {self.full_bits: centers}
+        ladder = default_ladder(centers.shape[0])
+
+        self.clients: list[DeviceClient] = []
+        row0 = 0
+        for i, spec in enumerate(specs):
+            self.clients.append(DeviceClient(
+                i, spec, cfg, row0, ladder, seed=seed + 101 * i))
+            row0 += spec.n_requests
+        self.n_requests = row0
+
+        # fleet-wide request stream + one batched device pass (this is
+        # the only compiled call the fleet makes; everything at
+        # simulation time is numpy / pure python)
+        data = SyntheticImages(ImageDatasetSpec(
+            image_size=cfg.image_size, n_classes=cfg.n_classes, seed=seed))
+        self.images, self.labels = data.batch(self.n_requests,
+                                              seed=seed + 1)
+        local_logits, f_remote, idx = device_forward_fn(cfg, params)(
+            params, jnp.asarray(self.images))
+        self.local_logits = np.asarray(local_logits)
+        self.f_remote = np.asarray(f_remote, np.float32)
+        self.idx = np.asarray(idx)
+
+    def centers_for(self, bits: int) -> np.ndarray:
+        if bits not in self._centers:
+            self._centers[bits] = subset_centers(
+                self._centers[self.full_bits], bits)
+        return self._centers[bits]
+
+    def compute_time(self, client: DeviceClient) -> float:
+        return client.device.compute_time(self.local_macs)
+
+    def make_payload(self, client: DeviceClient, req: int) -> Payload:
+        """Quantize + pack + LZW one request under the client's *current*
+        rate profile.  The static profile reuses the fused kernel's
+        full-codebook indices, keeping that path bit-identical to the
+        single-image offload."""
+        prof = client.controller.profile()
+        row = client.row0 + req
+        if prof.bits >= self.full_bits and prof.keep_frac >= 1.0:
+            keep = self.n_remote
+            idx = self.idx[row]
+        else:
+            keep = max(1, int(round(prof.keep_frac * self.n_remote)))
+            idx = requantize(self.f_remote[row][..., :keep],
+                             self.centers_for(prof.bits))
+        packed = pack_indices(idx, prof.bits)
+        nbytes, codes = compress_payload(packed)
+        return Payload(client=client.index, req=req, bits=prof.bits,
+                       keep=keep, count=int(idx.size), nbytes=nbytes,
+                       codes=codes)

@@ -33,6 +33,17 @@ from repro.models.cnn import extractor_macs, local_nn_macs
 from repro.serve.device_model import DeviceModel, InferenceCost
 
 
+def local_path_macs(cfg: AgileNNConfig, feat_hw: int) -> int:
+    """MACs of everything the weak device computes per inference
+    (extractor + Local NN) — the one place this formula lives; the
+    offload runtime and the gateway fleet both time/energy-account
+    against it."""
+    return (extractor_macs(cfg.image_size, 3, cfg.extractor_channels,
+                           cfg.extractor_layers)
+            + local_nn_macs(cfg.agile.k, cfg.n_classes, feat_hw,
+                            cfg.local_hidden))
+
+
 def remote_nn_macs(cfg: AgileNNConfig, feat_hw: int) -> int:
     """Approximate Remote NN MACs (inverted residual stack)."""
     C = cfg.extractor_channels - cfg.agile.k
@@ -81,10 +92,7 @@ def run_offload_inference(cfg: AgileNNConfig, params, images, *,
     preds = np.asarray(jnp.argmax(logits, axis=-1))
 
     feat_hw = cfg.image_size // (2 ** cfg.extractor_layers)
-    local_macs = (extractor_macs(cfg.image_size, 3, cfg.extractor_channels,
-                                 cfg.extractor_layers)
-                  + local_nn_macs(cfg.agile.k, cfg.n_classes, feat_hw,
-                                  cfg.local_hidden))
+    local_macs = local_path_macs(cfg, feat_hw)
     payload_bytes, _ = measure_payload(cfg, params, images)
     payload_per_sample = payload_bytes / B
     r_macs = remote_nn_macs(cfg, feat_hw)

@@ -93,6 +93,40 @@ def sample_tokens(logits, temps, key):
     return jnp.where(temps <= 0.0, greedy_t, drawn)
 
 
+class SlotPool:
+    """Host-side bookkeeping for a fixed set of batch slots.
+
+    ``rids[i]`` is the request occupying slot i (None = free).  The
+    continuous scheduler (decode slots) and the offload gateway
+    (remote-NN feature slots) share this discipline: work is admitted
+    into free slots, one fixed-shape device program runs over the whole
+    pool, and slots are released as requests finish — the compiled batch
+    shape never changes."""
+
+    def __init__(self, n_slots: int):
+        self.rids: list = [None] * n_slots
+
+    def __len__(self) -> int:
+        return len(self.rids)
+
+    def free(self) -> list[int]:
+        return [i for i, r in enumerate(self.rids) if r is None]
+
+    def acquire(self, slot: int, rid) -> None:
+        assert self.rids[slot] is None, f"slot {slot} already occupied"
+        self.rids[slot] = rid
+
+    def release(self, slot: int):
+        rid, self.rids[slot] = self.rids[slot], None
+        return rid
+
+    def occupied(self) -> list[tuple[int, object]]:
+        return [(i, r) for i, r in enumerate(self.rids) if r is not None]
+
+    def any_occupied(self) -> bool:
+        return any(r is not None for r in self.rids)
+
+
 class ContinuousScheduler:
     """Drives a decode slot pool over an unbounded request queue.
 
@@ -137,7 +171,7 @@ class ContinuousScheduler:
             "max_new": jnp.ones((S,), jnp.int32),
             "temps": jnp.zeros((S,), jnp.float32),
         }
-        self._slot_rid: list[Optional[int]] = [None] * S
+        self._slots = SlotPool(S)
         self._queue: deque = deque()           # (rid, Request)
         self._staging: list[dict] = []         # chunked-prefill admissions
         self._results: dict[int, object] = {}
@@ -252,8 +286,14 @@ class ContinuousScheduler:
         self._queue.append((rid, request))
         return rid
 
+    @property
+    def _slot_rid(self) -> list:
+        """Slot occupancy (kept as the historical attribute name: the
+        steady-state benchmark polls it between steps)."""
+        return self._slots.rids
+
     def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self._slot_rid) if r is None]
+        return self._slots.free()
 
     def _staging_slots(self) -> set:
         return {st["slot"] for st in self._staging}
@@ -322,7 +362,7 @@ class ContinuousScheduler:
             eos[g] = req.eos_id
             max_new[g] = req.max_new_tokens
             temps[g] = req.temperature
-            self._slot_rid[slot] = rid
+            self._slots.acquire(slot, rid)
 
         logits0, rows, _ = self._prefill(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths),
@@ -345,7 +385,7 @@ class ContinuousScheduler:
         n_segs = round_up(bucket, seg) // seg
         toks = np.zeros((n_segs * seg,), np.int32)
         toks[:T] = np.asarray(req.tokens, np.int32)
-        self._slot_rid[slot] = rid
+        self._slots.acquire(slot, rid)
         self._staging.append({
             "rid": rid, "req": req, "slot": slot, "depth": 0, "T": T,
             "bucket": bucket, "tokens": toks, "logits0": None,
@@ -409,10 +449,9 @@ class ContinuousScheduler:
         gen = np.asarray(self._pool["gen"])
         out = []
         for i in fin:
-            rid = self._slot_rid[i]
+            rid = self._slots.release(i)
             self._results[rid] = Completion(
                 buf[i, :gen[i]].astype(np.int32), int(gen[i]))
-            self._slot_rid[i] = None
             out.append(rid)
         # freed slots drop to depth 0 so the paged decode kernel's
         # max-depth branch follows live occupancy
@@ -439,8 +478,7 @@ class ContinuousScheduler:
 
     def run(self) -> dict:
         """Drain queue and pool; returns (and forgets) {rid: Completion}."""
-        while (self._queue or self._staging
-               or any(r is not None for r in self._slot_rid)):
+        while self._queue or self._staging or self._slots.any_occupied():
             self.step()
         out, self._results = self._results, {}
         return out

@@ -71,6 +71,80 @@ def test_relative_only_slowdown_is_not_a_regression(tmp_path):
     assert compare_rows(rows, _baseline(tmp_path)) == []
 
 
+def _sim_baseline(tmp_path):
+    p = tmp_path / "sim.json"
+    p.write_text(json.dumps({"suites": [], "rows": [
+        {"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+        {"name": "kernel.b.us", "value": 100.0, "derived": "x"},
+        {"name": "gateway.p99_ms", "value": 40.0, "derived": "w, simulated"},
+    ]}))
+    return str(p)
+
+
+def test_deterministic_rows_do_not_skew_machine_median(tmp_path):
+    """Simulated rows replay at ratio ~1.0 on any machine; they must not
+    drag the machine-speed median down and flag a uniformly slower box's
+    wall-clock rows as relative regressions."""
+    rows = [{"name": "kernel.a.us", "value": 200.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 200.0, "derived": "x"},
+            {"name": "gateway.p99_ms", "value": 40.0,
+             "derived": "w, simulated"}]
+    assert compare_rows(rows, _sim_baseline(tmp_path)) == []
+
+
+def test_deterministic_row_drift_not_excused_by_slow_box(tmp_path):
+    """A >25% move in a deterministic row is a semantic change; machine
+    normalization (which would excuse it on a uniformly slow box) must
+    not apply."""
+    rows = [{"name": "kernel.a.us", "value": 200.0, "derived": "x"},
+            {"name": "kernel.b.us", "value": 200.0, "derived": "x"},
+            {"name": "gateway.p99_ms", "value": 80.0,
+             "derived": "w, simulated"}]
+    regs = compare_rows(rows, _sim_baseline(tmp_path))
+    assert [r[0] for r in regs] == ["gateway.p99_ms"]
+
+
+def test_directionless_deterministic_row_gated_symmetrically(tmp_path):
+    """A deterministic row without a .us/_ms/per_s direction suffix
+    (e.g. adaptive payload bytes) must still be gated — drift in either
+    direction is a semantic change to the simulation."""
+    p = tmp_path / "d.json"
+    p.write_text(json.dumps({"suites": [], "rows": [
+        {"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+        {"name": "gateway.payload_bytes", "value": 100.0,
+         "derived": "w, simulated"},
+    ]}))
+    grew = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "gateway.payload_bytes", "value": 300.0,
+             "derived": "w, simulated"}]
+    assert [r[0] for r in compare_rows(grew, str(p))] == \
+        ["gateway.payload_bytes"]
+    shrank = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+              {"name": "gateway.payload_bytes", "value": 30.0,
+               "derived": "w, simulated"}]
+    assert [r[0] for r in compare_rows(shrank, str(p))] == \
+        ["gateway.payload_bytes"]
+    steady = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+              {"name": "gateway.payload_bytes", "value": 101.0,
+               "derived": "w, simulated"}]
+    assert compare_rows(steady, str(p)) == []
+
+
+def test_deterministic_ms_row_improvement_is_still_drift(tmp_path):
+    """A deterministic latency row that *improves* 2x is just as much a
+    semantic change to the seeded simulation as one that regresses —
+    the direction suffix must not exempt it."""
+    p = tmp_path / "imp.json"
+    p.write_text(json.dumps({"suites": [], "rows": [
+        {"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+        {"name": "gateway.p99_ms", "value": 40.0, "derived": "w, simulated"},
+    ]}))
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "gateway.p99_ms", "value": 20.0,
+             "derived": "w, simulated"}]
+    assert [r[0] for r in compare_rows(rows, str(p))] == ["gateway.p99_ms"]
+
+
 def test_unknown_rows_are_ignored(tmp_path):
     rows = [{"name": "kernel.new_row.us", "value": 5.0, "derived": "y"},
             {"name": "kernel.errored", "value": "ERROR", "derived": ""}]

@@ -1,0 +1,91 @@
+"""Closed-form unit tests for the embedded-device cost model (§6-§7).
+
+The gateway's timestamps and energy accounting all derive from
+`DeviceModel`; these tests pin every formula so a silent constant or
+unit change cannot drift the simulated fleet."""
+import dataclasses
+
+import pytest
+
+from repro.serve.device_model import DeviceModel, InferenceCost, mcu_memory_model
+
+WIFI = DeviceModel()                                   # 6 Mbps ESP-WROOM
+NARROW = DeviceModel(link_bps=270e3)                   # narrowband option
+
+
+def test_compute_time_closed_form():
+    d = DeviceModel(cpu_hz=216e6, macs_per_cycle=1.0)
+    assert d.compute_time(216e6) == pytest.approx(1.0)
+    assert d.compute_time(108e6) == pytest.approx(0.5)
+    # a 2-MAC/cycle device halves the time exactly
+    d2 = dataclasses.replace(d, macs_per_cycle=2.0)
+    assert d2.compute_time(216e6) == pytest.approx(0.5)
+
+
+def test_tx_time_closed_form():
+    assert WIFI.tx_time(750_000) == pytest.approx(1.0)     # 6 Mbit at 6 Mbps
+    assert NARROW.tx_time(1000) == pytest.approx(8000 / 270e3)
+    # link ratio is exactly the bandwidth ratio
+    assert NARROW.tx_time(1234) / WIFI.tx_time(1234) == pytest.approx(
+        6e6 / 270e3)
+
+
+def test_server_time_closed_form():
+    d = DeviceModel(server_macs_per_s=5e12, server_overhead_s=1e-3)
+    assert d.server_time(0) == pytest.approx(1e-3)
+    assert d.server_time(5e9) == pytest.approx(1e-3 + 1e-3)
+
+
+def test_energy_closed_form():
+    d = DeviceModel(p_cpu_w=0.33, p_tx_w=0.56)
+    macs, nbytes = 216e6, 750_000 * (WIFI.link_bps / 6e6)
+    expect = 0.33 * d.compute_time(macs) + 0.56 * d.tx_time(nbytes)
+    assert d.energy(macs, nbytes) == pytest.approx(expect)
+    # energy is linear in both arguments
+    assert d.energy(2 * macs, 0) == pytest.approx(2 * d.energy(macs, 0))
+    assert d.energy(0, 2 * nbytes) == pytest.approx(2 * d.energy(0, nbytes))
+
+
+def test_compute_vs_tx_crossover():
+    """The payload size where radio time overtakes local compute is
+    macs * link_bps / (8 * cpu_hz); the cost model must agree on both
+    sides of it."""
+    d = WIFI
+    macs = 1e6
+    crossover = macs * d.link_bps / (8.0 * d.cpu_hz)
+    assert d.tx_time(0.5 * crossover) < d.compute_time(macs)
+    assert d.tx_time(2.0 * crossover) > d.compute_time(macs)
+    assert d.tx_time(crossover) == pytest.approx(d.compute_time(macs))
+    # narrowband pulls the crossover proportionally lower
+    n_cross = macs * NARROW.link_bps / (8.0 * NARROW.cpu_hz)
+    assert n_cross / crossover == pytest.approx(270e3 / 6e6)
+    assert NARROW.tx_time(2.0 * n_cross) > NARROW.compute_time(macs)
+
+
+def test_narrowband_tx_dominates_energy():
+    """On the narrowband link the radio, not the CPU, dominates energy
+    for payloads past the crossover — the effect the rate controller
+    exploits."""
+    macs, nbytes = 1e6, 2000
+    assert NARROW.p_tx_w * NARROW.tx_time(nbytes) > \
+        NARROW.p_cpu_w * NARROW.compute_time(macs)
+    # same payload on WiFi: compute dominates instead
+    assert WIFI.p_tx_w * WIFI.tx_time(nbytes) < \
+        WIFI.p_cpu_w * WIFI.compute_time(macs)
+
+
+def test_inference_cost_end_to_end_sum():
+    c = InferenceCost(local_compute_s=1e-3, tx_s=2e-3, server_s=3e-3,
+                      payload_bytes=100, local_macs=1e5, remote_macs=1e7)
+    assert c.end_to_end_s == pytest.approx(6e-3)
+    d = c.as_dict
+    assert d["end_to_end_ms"] == pytest.approx(6.0)
+    assert d["local_compute_ms"] + d["tx_ms"] + d["server_ms"] == \
+        pytest.approx(d["end_to_end_ms"])
+
+
+def test_mcu_memory_model_int8_vs_float():
+    int8 = mcu_memory_model(100_000, 50_000, int8=True)
+    f32 = mcu_memory_model(100_000, 50_000, int8=False)
+    assert int8["flash_bytes"] == 100_000 and f32["flash_bytes"] == 400_000
+    assert int8["sram_bytes"] == 50_000 and f32["sram_bytes"] == 200_000

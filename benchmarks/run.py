@@ -22,7 +22,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
-                         "kernels, serve, gateway, roofline)")
+                         "kernels, serve, serve_sharded, gateway, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
@@ -45,18 +45,23 @@ def main(argv=None) -> None:
     from benchmarks.kernel_micro import kernel_micro_rows
     from benchmarks.paper_figures import ALL_FIGURES
     from benchmarks.roofline_table import roofline_rows
+    from benchmarks.serve_sharded import serve_sharded_rows
     from benchmarks.serve_steady import serve_steady_rows
 
     suites = dict(ALL_FIGURES)
     suites.update(ABLATIONS)
     suites["kernels"] = kernel_micro_rows
     suites["serve"] = serve_steady_rows
+    suites["serve_sharded"] = serve_sharded_rows
     suites["gateway"] = gateway_rows
     suites["roofline"] = roofline_rows
 
     if args.only:
         selected = args.only.split(",")
     elif args.smoke:
+        # serve_sharded is not in the default smoke set: its rows pin the
+        # device topology, and only the multi-device CI job (forced
+        # 8-device mesh, --only serve_sharded) has baseline rows to match
         selected = ["kernels", "serve", "gateway"]
     else:
         selected = list(suites)

@@ -1,0 +1,81 @@
+"""Mesh-sharded slot-pool serving benchmark: overlap on vs off.
+
+The same Poisson mixed-length queue as `serve_steady` runs through a
+scheduler whose slot pool is sharded over the data axis of a serving
+mesh (all visible devices; on the forced 8-device CPU mesh of the
+multi-device CI step this is a real 8-way shard, on a laptop it is the
+degenerate (1, 1) mesh — the code path is identical either way).  A
+long-prompt stream exercises chunked prefill so the overlapped pipeline
+has prefill segments to hide behind decode chunks.
+
+Two rows, identical workloads: ``serve.sharded_tokens_per_s`` is the
+overlapped pipeline, ``serve.sharded_serialized_tokens_per_s`` the
+serialized rounds — the gap is what async dispatch + double-buffered
+admission buys.  Both derived strings record the device count and mesh
+shape, so ``--compare`` only ever matches rows from the same topology.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import benchmarks.common as common
+
+KEY = jax.random.PRNGKey(0)
+
+
+def serve_sharded_rows() -> list[tuple]:
+    from repro.configs import get_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import backbone as bb
+    from repro.serve.engine import Request
+    from repro.serve.scheduler import ContinuousScheduler, SchedulerConfig
+    from benchmarks.serve_steady import _drain_with_poisson_arrivals
+
+    smoke = getattr(common, "SMOKE", False)
+    n_requests = 10 if smoke else 24
+    max_new = 6 if smoke else 16
+    lengths = (8, 16, 32, 100, 128)      # long tail -> chunked prefill
+
+    # the 8-slot pool must divide the data axis: largest divisor <= the
+    # visible device count (8 on the forced-count CI mesh, 1 locally)
+    data = max(d for d in (8, 4, 2, 1) if d <= jax.device_count())
+    mesh = make_serving_mesh(data=data, model=1)
+    topo = f"devices={jax.device_count()} mesh=({data},1)"
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = bb.init_params(cfg, KEY)
+    rng = np.random.RandomState(0)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab, rng.choice(lengths)),
+                    max_new_tokens=max_new) for _ in range(n_requests)]
+
+    def build(overlap: bool) -> ContinuousScheduler:
+        sched = ContinuousScheduler(
+            cfg, params, max_len=max(lengths) + max_new + 8, mesh=mesh,
+            sched=SchedulerConfig(buckets=lengths, max_slots=8,
+                                  prefill_group=4, chunk=4,
+                                  prefill_segment=32, overlap=overlap))
+        # warm-up drain pays the per-bucket prefill + segment + chunk
+        # compiles (shared jit caches make the second build cheap)
+        _drain_with_poisson_arrivals(sched, reqs, np.random.RandomState(1),
+                                     rate=3.0)
+        return sched
+
+    # paired min-of-3: the two modes' timed drains alternate so a load
+    # spike on a shared CI box hits both rows, not just one — the
+    # overlap-vs-serialized comparison stays meaningful under noise
+    scheds = {True: build(True), False: build(False)}
+    best = {True: float("inf"), False: float("inf")}
+    for _ in range(3):
+        for overlap, sched in scheds.items():
+            dt = _drain_with_poisson_arrivals(
+                sched, reqs, np.random.RandomState(1), rate=3.0)
+            best[overlap] = min(best[overlap], dt)
+
+    pin = f"{n_requests} reqs Poisson mix {lengths} max_new={max_new}"
+    return [
+        ("serve.sharded_tokens_per_s", n_requests * max_new / best[True],
+         f"{pin} overlap=on {topo}"),
+        ("serve.sharded_serialized_tokens_per_s",
+         n_requests * max_new / best[False], f"{pin} overlap=off {topo}"),
+    ]

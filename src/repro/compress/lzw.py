@@ -40,10 +40,15 @@ def lzw_encode(data: bytes) -> list[int]:
     return out
 
 
+# decoder codebook template: built once, copied per call — the 256
+# single-byte entries never change, only the learned suffix does
+_DECODE_BASE = {i: bytes([i]) for i in range(256)}
+
+
 def lzw_decode(codes: list[int]) -> bytes:
     if not codes:
         return b""
-    table = {i: bytes([i]) for i in range(256)}
+    table = dict(_DECODE_BASE)
     next_code = 256
     w = table[codes[0]]
     out = [w]

@@ -18,6 +18,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(*, data: int | None = None, model: int = 1):
+    """Serving mesh: the decode slot pool shards over ``data``, params go
+    tensor-parallel over ``model``.  Defaults to every visible device on
+    the data axis — on a single-device host this is the degenerate (1, 1)
+    mesh, so the same code path serves laptops and pods."""
+    if data is None:
+        data = max(1, jax.device_count() // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The batch-sharding axes of a mesh from make_production_mesh."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

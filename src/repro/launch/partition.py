@@ -19,7 +19,7 @@ import re
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import data_axes
+from repro.launch.mesh import axis_size, data_axes
 from repro.nn.module import map_with_path
 
 # (path regex, candidate axes-from-end for the "model" axis)
@@ -141,6 +141,40 @@ def param_shardings(params_shape, mesh, *, fsdp: bool = False,
             expert_size=e_size))
 
     return map_with_path(rule, params_shape)
+
+
+def pool_shardings(pool, mesh, *, model_axes=("model",)):
+    """Shardings for a decode slot pool (`serve.scheduler`): every leaf
+    leads with the slot axis, which shards over the data axes, so a slot
+    lives wholly on one data shard and host-side evict/inject touches
+    exactly that shard's rows.  Cache K/V leaves
+    (n_sb, n_layer, S, W, Hkv, hd) carry the slot axis third and
+    additionally go model-parallel over kv-heads when divisible, matching
+    the tensor-parallel attention params.  Axes that don't divide stay
+    replicated, so a 1-device mesh degenerates to the unsharded layout."""
+    daxes = data_axes(mesh)
+    dsize = axis_size(mesh, daxes)
+    msize = axis_size(mesh, model_axes)
+    dval = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    mval = (model_axes if len(model_axes) > 1
+            else (model_axes[0] if model_axes else None))
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v)$", path):
+            assert len(shape) == 6, (path, shape)
+            spec: list = [None] * 6
+            if dval is not None and shape[2] % dsize == 0:
+                spec[2] = dval
+            if mval is not None and msize > 1 and shape[4] % msize == 0:
+                spec[4] = mval
+            return NamedSharding(mesh, P(*spec))
+        spec = [None] * len(shape)
+        if dval is not None and shape[0] % dsize == 0:
+            spec[0] = dval
+        return NamedSharding(mesh, P(*spec))
+
+    return map_with_path(rule, pool)
 
 
 def batch_spec(mesh, ndim: int, *, batch_axis: int = 0) -> NamedSharding:

@@ -5,6 +5,8 @@ or a multi-client offload-gateway fleet run.
   python -m repro.launch.serve --arch qwen2-0.5b --local --tokens 8
   python -m repro.launch.serve --arch qwen2-0.5b --local --queue 24 \
       --lengths 8,16,32            # continuous-batching scheduler
+  python -m repro.launch.serve --arch qwen2-0.5b --local --queue 24 \
+      --mesh 4,2                   # slot pool sharded over a (4,2) mesh
   python -m repro.launch.serve --gateway 32 --requests 4 \
       --slo-ms 40                  # simulated weak-device fleet -> gateway
 """
@@ -21,10 +23,17 @@ def _serve_queue(cfg, params, args) -> int:
     from repro.serve.engine import Request, ServeEngine
     from repro.serve.scheduler import SchedulerConfig
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        dims = [int(x) for x in args.mesh.split(",")]
+        data, model = dims[0], (dims[1] if len(dims) > 1 else 1)
+        mesh = make_serving_mesh(data=data, model=model)
     lengths = tuple(int(x) for x in args.lengths.split(","))
     max_len = max(lengths) + args.tokens + 8
-    eng = ServeEngine(cfg, params, max_len=max_len,
-                      scheduler=SchedulerConfig(buckets=lengths))
+    eng = ServeEngine(cfg, params, max_len=max_len, mesh=mesh,
+                      scheduler=SchedulerConfig(
+                          buckets=lengths, overlap=not args.serialized))
     rng = np.random.RandomState(0)
     reqs = [Request(tokens=rng.randint(0, cfg.vocab, rng.choice(lengths)),
                     max_new_tokens=args.tokens)
@@ -33,7 +42,9 @@ def _serve_queue(cfg, params, args) -> int:
     outs = eng.generate(reqs)
     dt = time.time() - t0
     toks = sum(len(c.tokens) for c in outs)
-    print(f"served {len(reqs)} mixed-length requests "
+    topo = (f" on a ({mesh.shape['data']},{mesh.shape['model']}) mesh"
+            if mesh is not None else "")
+    print(f"served {len(reqs)} mixed-length requests{topo} "
           f"({toks} tokens) in {dt:.2f}s -> {toks / dt:.1f} tok/s")
     return 0
 
@@ -75,6 +86,13 @@ def main(argv=None) -> int:
                          "continuous-batching scheduler")
     ap.add_argument("--lengths", default="8,16,32",
                     help="comma-separated prompt-length mix for --queue")
+    ap.add_argument("--mesh", default=None, metavar="DATA[,MODEL]",
+                    help="serving mesh for --queue: the decode slot pool "
+                         "shards over DATA devices, params go tensor-"
+                         "parallel over MODEL (default: unsharded)")
+    ap.add_argument("--serialized", action="store_true",
+                    help="disable the overlapped prefill/decode pipeline "
+                         "(A/B baseline: host syncs every round)")
     ap.add_argument("--gateway", type=int, default=0, metavar="N",
                     help="simulate N weak-device clients through the "
                          "multi-client offload gateway")

@@ -116,10 +116,19 @@ def _stack_extras(requests: list[Request]) -> dict:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
-                 seed: int = 0, scheduler: Optional[SchedulerConfig] = None):
+                 seed: int = 0, scheduler: Optional[SchedulerConfig] = None,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.mesh = mesh            # scheduler path only: slot pool shards
+                                    # over the data axes, params go tensor-
+                                    # parallel (launch.partition)
+        if mesh is not None:
+            assert supports_continuous_batching(cfg), \
+                f"{cfg.name}: sharded serving runs through the continuous " \
+                "scheduler, which this architecture gates out — a meshed " \
+                "engine would silently serve unsharded on one device"
         self._seed = seed
         self._key = jax.random.PRNGKey(seed)
         self._sched_cfg = scheduler or SchedulerConfig()
@@ -144,20 +153,30 @@ class ServeEngine:
         if self._sched is None:
             self._sched = ContinuousScheduler(
                 self.cfg, self.params, sched=self._sched_cfg,
-                max_len=self.max_len, seed=self._seed + 1)
+                max_len=self.max_len, seed=self._seed + 1, mesh=self.mesh)
         return self._sched
 
     def generate(self, requests: list[Request]) -> list[Completion]:
         """One Completion per request, in submission order.  Equal-length
-        prompts take the single-batch fast path; mixed lengths run through
-        the continuous-batching scheduler (or equal-length grouping when
-        the architecture rules the scheduler out)."""
+        prompts take the single-batch fast path (unless a mesh is set —
+        sharded serving always goes through the scheduler); mixed lengths
+        run through the continuous-batching scheduler (or equal-length
+        grouping when the architecture rules the scheduler out)."""
         assert requests, "empty batch"
         lens = {len(r.tokens) for r in requests}
-        if len(lens) == 1:
+        schedulable = (supports_continuous_batching(self.cfg)
+                       and all(r.extras is None for r in requests))
+        # with a mesh, everything routes through the (sharded) scheduler:
+        # the fast path is single-device, and silently dropping the mesh
+        # would un-shard params a caller sharded because they must be
+        if self.mesh is not None and not schedulable:
+            raise ValueError(
+                "sharded serving cannot take requests with extras — they "
+                "route through the single-device fast path, dropping the "
+                "mesh")
+        if len(lens) == 1 and self.mesh is None:
             return self._generate_equal(requests)
-        if (supports_continuous_batching(self.cfg)
-                and all(r.extras is None for r in requests)):
+        if schedulable:
             sched = self.scheduler
             rids = [sched.submit(r) for r in requests]
             outs = sched.run()

@@ -4,10 +4,14 @@ Each client owns a seeded Poisson arrival process, a link (`Channel`), a
 rate controller and a slice of a fleet-wide synthetic request stream.
 The device half of the pipeline (extractor -> fused top-k split/quantize
 -> Local NN) runs *batched across the whole fleet* in one compiled call
-(`core.agile.device_forward_fn`) when the fleet is built; what remains per
-request at simulation time is host-side work the MCU would also do per
-inference: profile-dependent bit-pack + LZW of the quantization indices,
-and the device/channel timing bookkeeping.
+(`core.agile.device_forward_fn`) when the fleet is built.  The host-side
+radio framing is batched too: the first request sent under a rate
+profile triggers one vectorized requantize + `pack_indices_batch` pass
+and one LZW sweep over every fleet row at that framing, and all later
+sends under the profile are cache hits — simulation time per request is
+just the device/channel timing bookkeeping.  (The MCU's per-inference
+codec cost is accounted in *simulated* time by the device model either
+way; batching only removes redundant host work from the wall clock.)
 
 Compute and transmit timestamps come from the `DeviceModel` cost model
 (STM32F746-class MCU), with each client's link bandwidth taken from its
@@ -20,7 +24,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.lzw import compress_payload, pack_indices
+from repro.compress.lzw import compress_payload, pack_indices_batch
 from repro.compress.quantize import quantization_bits
 from repro.configs.agilenn_cifar import AgileNNConfig
 from repro.core.agile import device_forward_fn
@@ -132,6 +136,12 @@ class Fleet:
         self.local_logits = np.asarray(local_logits)
         self.f_remote = np.asarray(f_remote, np.float32)
         self.idx = np.asarray(idx)
+        # per-profile payload cache, filled fleet-wide on first use: one
+        # vectorized requantize + pack_indices_batch pass and one LZW
+        # sweep per (bits, keep) framing, so simulation-time make_payload
+        # is a dict hit — the codec cost is paid once per profile inside
+        # the measured pipeline, not once per request
+        self._payloads: dict[tuple[int, int], list] = {}
 
     def centers_for(self, bits: int) -> np.ndarray:
         if bits not in self._centers:
@@ -142,22 +152,34 @@ class Fleet:
     def compute_time(self, client: DeviceClient) -> float:
         return client.device.compute_time(self.local_macs)
 
+    def _encoded_rows(self, bits: int, keep: int) -> list:
+        """(nbytes, codes) for every fleet row under one framing, batched:
+        the static profile reuses the fused kernel's full-codebook
+        indices (byte-identical to per-image `pack_indices`, so that
+        path stays bit-identical to the single-image offload); reduced
+        profiles requantize the whole fleet's features in one pass."""
+        got = self._payloads.get((bits, keep))
+        if got is None:
+            if bits >= self.full_bits and keep >= self.n_remote:
+                idx = self.idx
+            else:
+                idx = requantize(self.f_remote[..., :keep],
+                                 self.centers_for(bits))
+            packed = pack_indices_batch(idx, bits)
+            got = [compress_payload(p) for p in packed]
+            self._payloads[(bits, keep)] = got
+        return got
+
     def make_payload(self, client: DeviceClient, req: int) -> Payload:
-        """Quantize + pack + LZW one request under the client's *current*
-        rate profile.  The static profile reuses the fused kernel's
-        full-codebook indices, keeping that path bit-identical to the
-        single-image offload."""
+        """One request's radio frame under the client's *current* rate
+        profile, served from the per-profile fleet-wide codec cache."""
         prof = client.controller.profile()
         row = client.row0 + req
         if prof.bits >= self.full_bits and prof.keep_frac >= 1.0:
             keep = self.n_remote
-            idx = self.idx[row]
         else:
             keep = max(1, int(round(prof.keep_frac * self.n_remote)))
-            idx = requantize(self.f_remote[row][..., :keep],
-                             self.centers_for(prof.bits))
-        packed = pack_indices(idx, prof.bits)
-        nbytes, codes = compress_payload(packed)
+        nbytes, codes = self._encoded_rows(prof.bits, keep)[row]
         return Payload(client=client.index, req=req, bits=prof.bits,
-                       keep=keep, count=int(idx.size), nbytes=nbytes,
-                       codes=codes)
+                       keep=keep, count=self.feat_hw * self.feat_hw * keep,
+                       nbytes=nbytes, codes=codes)

@@ -28,13 +28,38 @@ segment of prefill work.  One admission stages at a time; short groups
 keep admitting around it, and the staged slot joins the pool when its
 last segment lands.
 
+The pool is *mesh-shardable*: given a ``mesh`` (see
+`launch.mesh.make_serving_mesh`), the slot axis of every pool leaf shards
+over the data axes via `NamedSharding` (`launch.partition.pool_shardings`)
+and params go tensor-parallel through the serving partition rules — the
+same compiled programs run SPMD across the mesh, host-side evict/inject
+addresses slots whose rows live wholly on one data shard, and greedy
+outputs stay bit-identical to the single-device pool (tested on a forced
+multi-device CPU mesh).
+
+With ``SchedulerConfig.overlap`` (the default) the host pipelines itself
+one round deep against the device: while round k-1's decode chunk is
+still in flight, round k's staged prefill segment dispatches and its
+admission groups are bucketed/tokenized and injected — no host sync
+between them, JAX async dispatch queues it all behind the chunk.  Only
+then does the host block on round k-1's done flags (whose device->host
+copy started at dispatch, so the read usually lands instantly), evict,
+admit into the freed slots, and dispatch round k's chunk.  A long
+admission's prefill segments therefore overlap decode instead of taking
+turns with it, and the device never idles while the host tokenizes.
+Evict/admit timing is round-identical to ``overlap=False`` (admit,
+decode, block on the drain every round — the A/B baseline); completions
+just report one round later.
+
 Correctness invariants (tested against one-request-at-a-time decode):
   * pad keys are masked out of prefill attention and pad/stale cache
     slots are overwritten by decode writes before they become
     attendable, so neither bucket padding nor page-granular injects can
     change a request's tokens;
   * batch rows are independent end-to-end, so evict/inject of one slot
-    preserves every other slot's cache contents bit-for-bit.
+    preserves every other slot's cache contents bit-for-bit — which is
+    also why overlap's one-round-late eviction cannot move a token: a
+    done row is masked out of decode in-graph until it is drained.
 
 The padded-prefill path needs per-row attention masking and per-row cache
 depths, so the scheduler serves attention-only token models (no recurrent
@@ -70,6 +95,10 @@ class SchedulerConfig:
     prefill_segment: int = 64  # buckets above this prefill in segments of
                                # this many tokens, interleaved with decode
                                # chunks (0 disables chunked prefill)
+    overlap: bool = True       # pipeline host scheduling against the
+                               # in-flight decode chunk: drain one round
+                               # behind, prepare admissions while the
+                               # device runs (False: serialized rounds)
 
 
 def supports_continuous_batching(cfg: ArchConfig) -> bool:
@@ -137,7 +166,7 @@ class ContinuousScheduler:
 
     def __init__(self, cfg: ArchConfig, params, *,
                  sched: Optional[SchedulerConfig] = None,
-                 max_len: int = 256, seed: int = 0):
+                 max_len: int = 256, seed: int = 0, mesh=None):
         assert supports_continuous_batching(cfg), \
             f"{cfg.name}: continuous batching needs a pure-attention " \
             "RoPE decoder (use ServeEngine's equal-length grouping)"
@@ -145,6 +174,7 @@ class ContinuousScheduler:
         self.params = params
         self.sched = sched or SchedulerConfig()
         self.max_len = max_len
+        self.mesh = mesh
         self._key = jax.random.PRNGKey(seed)
         S = self.sched.max_slots
         L = max_len
@@ -171,11 +201,27 @@ class ContinuousScheduler:
             "max_new": jnp.ones((S,), jnp.int32),
             "temps": jnp.zeros((S,), jnp.float32),
         }
+        if mesh is not None:
+            from repro.launch.mesh import axis_size, data_axes
+            from repro.launch.partition import param_shardings, pool_shardings
+            dsize = axis_size(mesh, data_axes(mesh))
+            assert S % dsize == 0, \
+                f"max_slots {S} must divide the {dsize}-way data axes so " \
+                "every data shard owns a fixed strip of slots"
+            # serving params are tensor-parallel only (weights resident on
+            # the model axis, no FSDP gathers in the token loop); the pool
+            # shards its slot axis over the data axes, so each device
+            # decodes its own strip of slots with the same compiled program
+            self.params = params = jax.device_put(
+                params, param_shardings(params, mesh))
+            self._pool = jax.device_put(
+                self._pool, pool_shardings(self._pool, mesh))
         self._slots = SlotPool(S)
         self._queue: deque = deque()           # (rid, Request)
         self._staging: list[dict] = []         # chunked-prefill admissions
         self._results: dict[int, object] = {}
         self._next_rid = 0
+        self._pending: Optional[dict] = None   # in-flight chunk snapshot
 
         def _prefill(params, tokens, lengths, *, max_len):
             return bb.prefill(cfg, params, {"tokens": tokens},
@@ -308,9 +354,12 @@ class ContinuousScheduler:
         seg = self.sched.prefill_segment
         return bool(seg) and self._bucket_of(len(req.tokens)) > seg
 
-    def _admit(self) -> bool:
-        """Admit one bucket group — or start one chunked prefill — from
-        the queue head into free slots.
+    def _plan_one(self):
+        """Form one admission decision from the queue head: a bucket
+        group (returned as a prepared dict of numpy prefill inputs, its
+        slots acquired), a staging claim (returns True), or None when
+        nothing can admit.  Pure host work — the device is untouched, so
+        overlap mode runs this while a decode chunk is in flight.
 
         Groups are formed in FIFO order keyed by the head request's
         bucket, so the queue head is always in the next group — no
@@ -321,7 +370,7 @@ class ContinuousScheduler:
         behind it keeps the pool fed."""
         free = self._free_slots()
         if not free or not self._queue:
-            return False
+            return None
         head_rid, head_req = self._queue[0]
         if self._is_long(head_req):
             if not self._staging:
@@ -331,7 +380,7 @@ class ContinuousScheduler:
             shorts = [(r, q) for r, q in self._queue
                       if not self._is_long(q)]
             if not shorts:
-                return False
+                return None
             head_bucket = self._bucket_of(len(shorts[0][1].tokens))
         else:
             head_bucket = self._bucket_of(len(head_req.tokens))
@@ -345,7 +394,7 @@ class ContinuousScheduler:
             else:
                 keep.append((rid, req))
         if not take:
-            return False
+            return None
         self._queue = keep
 
         tokens = np.zeros((G, head_bucket), np.int32)
@@ -363,16 +412,32 @@ class ContinuousScheduler:
             max_new[g] = req.max_new_tokens
             temps[g] = req.temperature
             self._slots.acquire(slot, rid)
+        return {"bucket": head_bucket, "tokens": tokens, "lengths": lengths,
+                "slots": slots, "eos": eos, "max_new": max_new,
+                "temps": temps}
 
+    def _plan_admissions(self) -> list[dict]:
+        """Every admission the queue and free slots allow, prepared but
+        not yet launched."""
+        groups = []
+        while True:
+            g = self._plan_one()
+            if g is None:
+                return groups
+            if g is not True:
+                groups.append(g)
+
+    def _launch_group(self, g: dict) -> None:
+        """Dispatch one prepared group: per-bucket prefill + in-graph
+        inject.  Async — the host returns as soon as the work is queued."""
         logits0, rows, _ = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            max_len=self._copy_width(head_bucket))
+            self.params, jnp.asarray(g["tokens"]), jnp.asarray(g["lengths"]),
+            max_len=self._copy_width(g["bucket"]))
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
-            self._pool, jnp.asarray(slots), rows, logits0,
-            jnp.asarray(lengths), jnp.asarray(eos), jnp.asarray(max_new),
-            jnp.asarray(temps), sub)
-        return True
+            self._pool, jnp.asarray(g["slots"]), rows, logits0,
+            jnp.asarray(g["lengths"]), jnp.asarray(g["eos"]),
+            jnp.asarray(g["max_new"]), jnp.asarray(g["temps"]), sub)
 
     # ------------------------------------------------- chunked prefill --
 
@@ -430,51 +495,121 @@ class ContinuousScheduler:
 
     # ----------------------------------------------------------- loop --
 
-    def _active_mask(self) -> jnp.ndarray:
+    def _active_mask(self) -> np.ndarray:
         stag = self._staging_slots()
-        return jnp.asarray(np.asarray(
-            [r is not None and i not in stag
-             for i, r in enumerate(self._slot_rid)]))
+        return np.asarray([r is not None and i not in stag
+                           for i, r in enumerate(self._slot_rid)])
 
-    def _drain(self) -> list[int]:
-        """Evict finished slots: one host copy of buf/gen per segment."""
+    def _complete(self, fin: list[int], buf, gen) -> list[int]:
+        """Release finished slots and record their Completions; freed
+        slots drop to depth 0 so the paged decode kernel's max-depth
+        branch follows live occupancy."""
         from repro.serve.engine import Completion
-        done = np.asarray(self._pool["done"])
-        stag = self._staging_slots()
-        fin = [i for i, rid in enumerate(self._slot_rid)
-               if rid is not None and done[i] and i not in stag]
-        if not fin:
-            return []
-        buf = np.asarray(self._pool["buf"])
-        gen = np.asarray(self._pool["gen"])
         out = []
         for i in fin:
             rid = self._slots.release(i)
             self._results[rid] = Completion(
                 buf[i, :gen[i]].astype(np.int32), int(gen[i]))
             out.append(rid)
-        # freed slots drop to depth 0 so the paged decode kernel's
-        # max-depth branch follows live occupancy
         self._pool["cache_len"] = (
             self._pool["cache_len"].at[jnp.asarray(fin)].set(0))
         return out
 
-    def step(self) -> list[int]:
-        """One scheduling round: advance the staged prefill a segment,
-        admit groups while slots are free, decode one chunk, evict what
-        finished.  Returns completed request ids."""
-        self._advance_staging()
-        while self._admit():
-            pass
+    def _drain(self) -> list[int]:
+        """Evict finished slots: one host copy of buf/gen per segment."""
+        done = np.asarray(self._pool["done"])
         stag = self._staging_slots()
-        if not any(r is not None and i not in stag
-                   for i, r in enumerate(self._slot_rid)):
+        fin = [i for i, rid in enumerate(self._slot_rid)
+               if rid is not None and done[i] and i not in stag]
+        if not fin:
             return []
+        return self._complete(fin, np.asarray(self._pool["buf"]),
+                              np.asarray(self._pool["gen"]))
+
+    def _snapshot_chunk(self, rids: list, active: np.ndarray) -> None:
+        """Capture the just-dispatched chunk's observable state and start
+        its device->host copies; the host blocks on them only next round,
+        after the following round's work has been dispatched."""
+        pend = {"done": self._pool["done"], "buf": self._pool["buf"],
+                "gen": self._pool["gen"], "rids": rids, "active": active}
+        try:
+            # the round's one blocking read; buf/gen stay device-side and
+            # are only pulled on rounds that actually evict
+            pend["done"].copy_to_host_async()
+        except AttributeError:          # non-Array leaves under tracing
+            pass
+        self._pending = pend
+
+    def _drain_pending(self) -> list[int]:
+        """Evict the finishers of the *previous* round's chunk.  Only
+        slots that were active in that chunk AND still hold the same
+        occupant are eligible: a slot freed and re-admitted in between
+        carries a fresher request whose done flag this snapshot cannot
+        know, and a then-staging slot's done flag is the previous
+        occupant's leftover."""
+        p, self._pending = self._pending, None
+        if p is None:
+            return []
+        done = np.asarray(p["done"])
+        fin = [i for i, rid in enumerate(self._slot_rid)
+               if rid is not None and p["active"][i]
+               and p["rids"][i] == rid and done[i]]
+        if not fin:
+            return []
+        return self._complete(fin, np.asarray(p["buf"]),
+                              np.asarray(p["gen"]))
+
+    def _dispatch_chunk(self) -> Optional[np.ndarray]:
+        """Dispatch one decode chunk over the occupied non-staging slots;
+        returns the active mask used (None when nothing is decodable)."""
+        active = self._active_mask()
+        if not active.any():
+            return None
         self._key, sub = jax.random.split(self._key)
         self._pool, _ = self._chunk(self.params, self._pool,
-                                    self._active_mask(), sub,
+                                    jnp.asarray(active), sub,
                                     jnp.int32(self.sched.chunk))
+        return active
+
+    def step(self) -> list[int]:
+        """One scheduling round.  Serialized mode: advance the staged
+        prefill a segment, admit groups while slots are free, decode one
+        chunk, block on the drain.  Overlap mode pipelines the same round
+        against the device (see `_step_overlapped`).  Returns completed
+        request ids (overlap mode reports a completion one round after
+        its chunk, once its async done-copy has landed)."""
+        if self.sched.overlap:
+            return self._step_overlapped()
+        self._advance_staging()
+        for g in self._plan_admissions():
+            self._launch_group(g)
+        if self._dispatch_chunk() is None:
+            return []
         return self._drain()
+
+    def _step_overlapped(self) -> list[int]:
+        """One pipelined round: round k's prefill work is dispatched, and
+        its admissions bucketed/tokenized, while round k-1's chunk is
+        still in flight — the staged segment, the injects and the decode
+        chunk queue back-to-back on the device with no host sync between
+        them, and the host's one blocking read (round k-1's done flags,
+        whose device->host copy started at dispatch) sits behind a full
+        round of queued work instead of stalling an idle device.  Evict/
+        admit timing is round-identical to serialized mode: chunk k-1's
+        finishers free their slots before chunk k dispatches, a second
+        admission pass fills them, and completions simply report one
+        round late."""
+        self._advance_staging()                # prefill segment (async)
+        for g in self._plan_admissions():      # overlap chunk k-1: bucket/
+            self._launch_group(g)              # tokenize + inject dispatch
+        out = self._drain_pending()            # round k-1 lands (no idle
+        for g in self._plan_admissions():      # wait); freed slots admit
+            self._launch_group(g)              # before this round's chunk
+        rids = list(self._slot_rid)            # occupancy at dispatch time
+        active = self._dispatch_chunk()
+        if active is not None:
+            self._snapshot_chunk(rids, active)
+        return out
 
     def run(self) -> dict:
         """Drain queue and pool; returns (and forgets) {rid: Completion}."""

@@ -160,6 +160,47 @@ def test_device_forward_matches_agile_forward():
     np.testing.assert_array_equal(np.asarray(local_logits), np.asarray(ll2))
 
 
+def test_fleet_batched_codec_matches_per_request_reference():
+    """The fleet-wide payload cache (one requantize + pack_indices_batch
+    + LZW sweep per rate profile) must frame every request byte-identically
+    to the per-request reference codec, at the static profile and down
+    the rate ladder."""
+    specs = mixed_fleet(4, n_requests=3)
+    fleet = Fleet(CFG, PARAMS, specs, seed=3)
+    ladder = default_ladder(PARAMS["quant"]["centers"].shape[0])
+    for prof in ladder:
+        if prof.bits >= fleet.full_bits and prof.keep_frac >= 1.0:
+            keep = fleet.n_remote
+        else:
+            keep = max(1, int(round(prof.keep_frac * fleet.n_remote)))
+        got = fleet._encoded_rows(prof.bits, keep)
+        assert len(got) == fleet.n_requests
+        for row in range(fleet.n_requests):
+            if prof.bits >= fleet.full_bits and keep >= fleet.n_remote:
+                idx = fleet.idx[row]
+            else:
+                idx = requantize(fleet.f_remote[row][..., :keep],
+                                 fleet.centers_for(prof.bits))
+            ref_bytes, ref_codes = compress_payload(
+                pack_indices(idx, prof.bits))
+            assert got[row] == (ref_bytes, ref_codes)
+        # second lookup is the cache, not a recompute
+        assert fleet._encoded_rows(prof.bits, keep) is got
+
+
+def test_fleet_payload_cache_hits_across_requests():
+    """Repeated sends at one profile reuse the fleet-wide sweep: the
+    cache holds exactly the profiles used, and make_payload frames are
+    identical across lookups."""
+    specs = mixed_fleet(3, n_requests=2)
+    fleet = Fleet(CFG, PARAMS, specs, seed=4)
+    c = fleet.clients[1]
+    p1 = fleet.make_payload(c, 0)
+    p2 = fleet.make_payload(c, 0)
+    assert (p1.nbytes, p1.codes, p1.count) == (p2.nbytes, p2.codes, p2.count)
+    assert set(fleet._payloads) == {(fleet.full_bits, fleet.n_remote)}
+
+
 # ------------------------------------------------------- gateway runs ---
 
 def _run(specs, *, seed=0, width=4):

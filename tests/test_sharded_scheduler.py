@@ -1,0 +1,138 @@
+"""Mesh-sharded slot pool: parity with the single-device scheduler.
+
+Runs in a subprocess so `--xla_force_host_platform_device_count=8` is set
+before JAX imports and never leaks into the main test process (the same
+isolation as test_dryrun_small_mesh).  The claims:
+
+  * greedy tokens from the data-sharded pool are *bit-identical* to the
+    single-device scheduler's, overlap on or off;
+  * the pool's integer state (buf/gen/done/tok/cache_len) is bit-identical
+    too; the float K/V cache matches to GEMM-reassociation tolerance —
+    per-shard rows multiply at a different M-shape, the same ULP class
+    that separates B=1 from B=8 matmuls on one device (the seed
+    scheduler's own cache differs from per-request decode the same way);
+  * two identical sharded runs are bitwise deterministic, cache included;
+  * a tensor-parallel (4, 2) mesh actually shards params over the model
+    axis and serves deterministically;
+  * inject lands a request's rows on the data shard that owns its slot,
+    and evict resets that shard's cache_len.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+from repro.configs import get_config
+from repro.models import backbone as bb
+from repro.launch.mesh import make_serving_mesh
+from repro.serve.engine import Request
+from repro.serve.scheduler import ContinuousScheduler, SchedulerConfig
+
+cfg = get_config("qwen2-0.5b").reduced()
+params = bb.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+lens = [8, 16, 32, 5, 11, 27, 8, 16, 32, 8]
+reqs = [Request(tokens=rng.randint(0, cfg.vocab, L), max_new_tokens=4)
+        for L in lens]
+KW = dict(buckets=(8, 16, 32), max_slots=8, prefill_group=4, chunk=4)
+checks = {}
+
+
+def run(mesh, overlap=True):
+    sched = ContinuousScheduler(cfg, params, max_len=64, mesh=mesh,
+                                sched=SchedulerConfig(overlap=overlap, **KW))
+    rids = [sched.submit(r) for r in reqs]
+    outs = sched.run()
+    toks = [outs[r].tokens.tolist() for r in rids]
+    pool = jax.tree.map(np.asarray, sched._pool)
+    return toks, pool, sched
+
+
+ref_toks, ref_pool, _ = run(None)
+mesh = make_serving_mesh(data=8, model=1)
+sh_toks, sh_pool, _ = run(mesh)
+
+checks["tokens_bit_identical"] = sh_toks == ref_toks
+checks["int_state_bit_identical"] = all(
+    np.array_equal(ref_pool[k], sh_pool[k])
+    for k in ("buf", "gen", "done", "tok", "cache_len", "eos", "max_new"))
+checks["cache_allclose"] = all(
+    np.allclose(ref_pool["cache"][k], sh_pool["cache"][k],
+                rtol=1e-5, atol=1e-5) for k in ("k", "v"))
+
+sh2_toks, sh2_pool, _ = run(mesh)
+checks["sharded_deterministic"] = sh2_toks == sh_toks and all(
+    np.array_equal(a, b) for a, b in
+    zip(jax.tree.leaves(sh_pool), jax.tree.leaves(sh2_pool)))
+
+ser_toks, _, _ = run(mesh, overlap=False)
+checks["serialized_tokens_bit_identical"] = ser_toks == ref_toks
+
+# tensor-parallel mesh: params sharded over the model axis, runs twice
+# to the same tokens (bitwise cache identity is a data-parallel-only
+# claim: row-parallel matmuls psum across model shards)
+tp = make_serving_mesh(data=4, model=2)
+tp_toks, _, tp_sched = run(tp)
+tp2_toks, _, _ = run(tp)
+checks["tp_deterministic"] = tp_toks == tp2_toks
+checks["tp_budgets"] = all(len(t) == 4 for t in tp_toks)
+checks["tp_params_model_sharded"] = any(
+    "model" in str(getattr(l.sharding, "spec", ""))
+    for l in jax.tree.leaves(tp_sched.params))
+
+# ---- evict/inject shard placement -----------------------------------
+sched = ContinuousScheduler(cfg, params, max_len=64, mesh=mesh,
+                            sched=SchedulerConfig(overlap=False, **KW))
+rid = sched.submit(Request(tokens=np.arange(8) % cfg.vocab,
+                           max_new_tokens=30))
+sched.step()
+slot = sched._slot_rid.index(rid)
+shards = sched._pool["buf"].addressable_shards
+checks["pool_slot_axis_sharded"] = (
+    len(shards) == 8 and all(s.data.shape[0] == 1 for s in shards))
+
+
+def shard_row(arr, slot):
+    for s in arr.addressable_shards:
+        sl = s.index[0]
+        if sl.start <= slot < sl.stop:
+            return np.asarray(s.data), slot - sl.start, sl
+    raise AssertionError("no shard owns the slot")
+
+
+cl_local, off, sl = shard_row(sched._pool["cache_len"], slot)
+checks["inject_lands_on_owning_shard"] = (
+    cl_local.shape[0] == 1                       # 8 slots over 8 shards
+    and int(cl_local[off]) == 8 + sched.sched.chunk)   # prompt + 1 chunk
+buf_local, off_b, _ = shard_row(sched._pool["buf"], slot)
+buf_global = np.asarray(sched._pool["buf"])
+checks["shard_holds_its_rows"] = bool(
+    np.array_equal(buf_local[off_b], buf_global[slot]))
+sched.run()
+cl_local, off, _ = shard_row(sched._pool["cache_len"], slot)
+checks["evict_resets_owning_shard"] = int(cl_local[off]) == 0
+
+print(json.dumps(checks))
+"""
+
+
+@pytest.mark.parametrize("dummy", [0])
+def test_sharded_pool_matches_single_device(dummy):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    checks = json.loads(proc.stdout.strip().splitlines()[-1])
+    bad = [k for k, v in checks.items() if not v]
+    assert not bad, f"failed checks: {bad} ({checks})"

@@ -1,0 +1,76 @@
+"""Chaos benchmark: the offload gateway under a scripted fault schedule.
+
+Two seeded fleet runs share one pinned workload (16 clients round-robined
+over WiFi / narrowband / lossy-WiFi links, 6 inferences each, pool width
+8, 150 ms request deadlines):
+
+  * a *chaos* run — a 200 ms mid-run blackout, Gilbert–Elliott burst
+    loss, payload corruption and a gateway slot-pool stall all at once —
+    measuring how far down the degradation ladder the fleet steps
+    (fallback / shed / degraded rates, deadline misses, tail latency);
+  * a *total blackout* run — every transmit attempt lost for the whole
+    run — pinning the floor of the ladder: every request must resolve as
+    a Local-NN fallback (nothing hangs) and the accuracy proxy is the
+    local path's accuracy alone.
+
+Every row is a *deterministic* output of the seeded simulation (fault
+randomness lives in the injector's per-client streams), so the
+``--compare`` gate matches them at ratio ~1.0 on any machine and only
+moves when the failure semantics change.  The workload is pinned (no
+--smoke shrink) so smoke rows stay comparable to the committed baseline.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def faults_rows() -> list[tuple]:
+    from repro.configs.agilenn_cifar import gateway_demo_config
+    from repro.core.agile import init_agile_params
+    from repro.serve.faults import (
+        Blackout, BurstLoss, FaultInjector, GatewayStall, PayloadCorruption,
+    )
+    from repro.serve.gateway import (
+        Fleet, GatewayConfig, OffloadGateway, mixed_fleet)
+
+    cfg = gateway_demo_config()
+    params = init_agile_params(cfg, jax.random.PRNGKey(0))
+    gw = GatewayConfig(batch_width=8)
+    pin = "16 clients x6 reqs W=8 deadline=150ms"
+
+    def run(schedule) -> "object":
+        specs = mixed_fleet(16, n_requests=6, deadline_ms=150.0)
+        fleet = Fleet(cfg, params, specs, seed=0)
+        inj = FaultInjector(schedule, seed=7)
+        return OffloadGateway(cfg, params, fleet, gw, faults=inj).run()
+
+    chaos = run((
+        Blackout(0.05, 0.25),
+        BurstLoss(0.0, 1.0, p_good_bad=0.2, p_bad_good=0.3),
+        PayloadCorruption(0.0, 1.0, prob=0.25),
+        GatewayStall(0.10, 0.30, stall_s=0.02),
+    ))
+    n = len(chaos.traces)
+    fleet_reqs = 16 * 6
+    assert n == fleet_reqs, \
+        f"chaos run resolved {n}/{fleet_reqs} requests — a fault path hung"
+
+    blackout = run((Blackout(),))
+    assert len(blackout.traces) == fleet_reqs, \
+        "total blackout left requests unresolved"
+    assert blackout.fallback_rate == 1.0, \
+        "total blackout must resolve every request as a Local-NN fallback"
+
+    sched = "blackout+burst+corrupt+gwstall"
+    return [
+        ("faults.fallback_rate", chaos.fallback_rate,
+         f"{pin} {sched}, simulated"),
+        ("faults.deadline_miss_rate", chaos.deadline_miss_rate,
+         f"{pin} {sched}, simulated"),
+        ("faults.degraded_rate", chaos.degraded_rate,
+         f"{pin} {sched}, simulated"),
+        ("faults.e2e_p99_ms", chaos.latency_percentile_ms(99),
+         f"{pin} {sched}, simulated"),
+        ("faults.blackout_accuracy_proxy", blackout.summary()["accuracy"],
+         f"{pin} total blackout, simulated"),
+    ]

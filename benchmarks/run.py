@@ -22,12 +22,13 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
-                         "kernels, serve, serve_sharded, gateway, roofline)")
+                         "kernels, serve, serve_sharded, gateway, faults, "
+                         "roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: cheap suites only (kernels, serve, "
-                         "gateway) with shrunk workloads")
+                         "gateway, faults) with shrunk workloads")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="regression gate: compare collected rows against a "
                          "JSON baseline and exit 2 if any matching row "
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         benchmarks.common.SMOKE = True
 
     from benchmarks.ablations import ABLATIONS
+    from benchmarks.faults import faults_rows
     from benchmarks.gateway import gateway_rows
     from benchmarks.kernel_micro import kernel_micro_rows
     from benchmarks.paper_figures import ALL_FIGURES
@@ -54,6 +56,7 @@ def main(argv=None) -> None:
     suites["serve"] = serve_steady_rows
     suites["serve_sharded"] = serve_sharded_rows
     suites["gateway"] = gateway_rows
+    suites["faults"] = faults_rows
     suites["roofline"] = roofline_rows
 
     if args.only:
@@ -62,7 +65,7 @@ def main(argv=None) -> None:
         # serve_sharded is not in the default smoke set: its rows pin the
         # device topology, and only the multi-device CI job (forced
         # 8-device mesh, --only serve_sharded) has baseline rows to match
-        selected = ["kernels", "serve", "gateway"]
+        selected = ["kernels", "serve", "gateway", "faults"]
     else:
         selected = list(suites)
     print("name,value,derived")

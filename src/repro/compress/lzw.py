@@ -13,6 +13,16 @@ from __future__ import annotations
 import numpy as np
 
 
+class PayloadCorruptionError(ValueError):
+    """A payload failed to decode: truncated or bit-flipped on the air.
+
+    Raised (instead of an uncaught KeyError/IndexError or silently wrong
+    data) by `lzw_decode` on an impossible code and by `unpack_indices`
+    on a payload too short for its framing.  The gateway treats it as a
+    droppable fault — the request degrades to zero-filled channels or a
+    Local-NN fallback instead of crashing the event loop."""
+
+
 def lzw_encode(data: bytes) -> list[int]:
     """Classic LZW: returns a list of integer codes.
 
@@ -50,15 +60,22 @@ def lzw_decode(codes: list[int]) -> bytes:
         return b""
     table = dict(_DECODE_BASE)
     next_code = 256
+    if not isinstance(codes[0], int) or not 0 <= codes[0] < 256:
+        raise PayloadCorruptionError(
+            f"bad LZW stream head {codes[0]!r}: the first code must be a "
+            "literal byte")
     w = table[codes[0]]
     out = [w]
     for c in codes[1:]:
+        if not isinstance(c, int) or c < 0:
+            raise PayloadCorruptionError(f"bad LZW code {c!r}")
         if c in table:
             entry = table[c]
         elif c == next_code:
             entry = w + w[:1]
         else:
-            raise ValueError(f"bad LZW code {c}")
+            raise PayloadCorruptionError(
+                f"bad LZW code {c} (table holds {next_code})")
         out.append(entry)
         table[next_code] = w + entry[:1]
         next_code += 1
@@ -100,10 +117,21 @@ def pack_indices(idx: np.ndarray, bits: int) -> bytes:
     return np.packbits(bitstream.ravel()).tobytes()
 
 
+def packed_nbytes(bits: int, count: int) -> int:
+    """Byte length of a well-framed ``pack_indices`` payload: `count`
+    indices at `bits` bits, padded to a byte boundary."""
+    return count if bits == 8 else (count * bits + 7) // 8
+
+
 def unpack_indices(data: bytes, bits: int, count: int) -> np.ndarray:
     """Inverse of ``pack_indices``: the first `count` indices of a packed
     payload (trailing pad bits from the byte-boundary framing are
-    discarded)."""
+    discarded).  A payload shorter than its framing demands raises
+    `PayloadCorruptionError` instead of returning a ragged array."""
+    if len(data) < packed_nbytes(bits, count):
+        raise PayloadCorruptionError(
+            f"truncated payload: {len(data)} bytes cannot hold {count} "
+            f"indices at {bits} bits")
     buf = np.frombuffer(data, np.uint8)
     if bits == 8:
         return buf[:count].astype(np.int32)
@@ -120,6 +148,11 @@ def unpack_indices_batch(payloads: list[bytes], bits: int,
     gateway groups arrivals by framing before decoding).  Returns a
     (B, count) int32 array, row-identical to per-payload
     ``unpack_indices``."""
+    need = packed_nbytes(bits, count)
+    if any(len(p) != len(payloads[0]) or len(p) < need for p in payloads):
+        raise PayloadCorruptionError(
+            f"ragged or truncated payload batch: need {need} bytes per row "
+            f"for {count} indices at {bits} bits")
     buf = np.frombuffer(b"".join(payloads), np.uint8)
     buf = buf.reshape(len(payloads), -1)
     if bits == 8:

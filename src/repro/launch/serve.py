@@ -9,6 +9,10 @@ or a multi-client offload-gateway fleet run.
       --mesh 4,2                   # slot pool sharded over a (4,2) mesh
   python -m repro.launch.serve --gateway 32 --requests 4 \
       --slo-ms 40                  # simulated weak-device fleet -> gateway
+  python -m repro.launch.serve --gateway 32 --deadline-ms 150 \
+      --faults "blackout:0.05:0.2;burst;corrupt:0:1:0.3" --fault-seed 7
+                                   # chaos run: scripted faults, bounded
+                                   # retries, graceful Local-NN fallback
 """
 from __future__ import annotations
 
@@ -54,18 +58,24 @@ def _serve_gateway(args) -> int:
     import jax
     from repro.configs.agilenn_cifar import gateway_demo_config
     from repro.core.agile import init_agile_params
+    from repro.serve.faults import FaultInjector, parse_faults
     from repro.serve.gateway import (
         Fleet, GatewayConfig, OffloadGateway, mixed_fleet)
 
     cfg = gateway_demo_config()
     params = init_agile_params(cfg, jax.random.PRNGKey(0))
     specs = mixed_fleet(args.gateway, n_requests=args.requests,
-                        slo_ms=args.slo_ms)
+                        slo_ms=args.slo_ms, deadline_ms=args.deadline_ms)
     fleet = Fleet(cfg, params, specs, seed=0)
+    faults = (FaultInjector(parse_faults(args.faults), seed=args.fault_seed)
+              if args.faults else None)
     report = OffloadGateway(
-        cfg, params, fleet, GatewayConfig(batch_width=args.batch_width)).run()
+        cfg, params, fleet, GatewayConfig(batch_width=args.batch_width),
+        faults=faults).run()
     mode = ("static rate" if args.slo_ms is None
             else f"adaptive rate, SLO {args.slo_ms:g} ms")
+    if args.faults:
+        mode += f", faults '{args.faults}' seed {args.fault_seed}"
     print(f"gateway: {args.gateway} clients x {args.requests} reqs "
           f"({mode}), pool width {args.batch_width}")
     for k, v in report.summary().items():
@@ -103,6 +113,23 @@ def main(argv=None) -> int:
                          "control (default: static configuration)")
     ap.add_argument("--batch-width", type=int, default=8,
                     help="gateway Remote-NN feature slot pool width")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="scripted fault schedule for the gateway run: "
+                         "';'-separated events, ':'-separated fields "
+                         "(simulated seconds) — blackout[:t0:t1], "
+                         "burst[:t0:t1[:pgb:pbg]] (Gilbert-Elliott burst "
+                         "loss), degrade[:t0:t1[:scale[:loss]]], "
+                         "devstall[:t0:t1[:s]], gwstall[:t0:t1[:s]], "
+                         "corrupt[:t0:t1[:p]]; e.g. "
+                         "'blackout:0.05:0.2;burst;corrupt:0:1:0.3'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault schedule's RNG streams "
+                         "(same spec + seed replays identical faults)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for gateway clients: the "
+                         "radio stops retrying past it, late arrivals are "
+                         "shed at admission, and the device degrades to "
+                         "its Local-NN logits (default: no deadline)")
     args = ap.parse_args(argv)
 
     if args.gateway:

@@ -46,12 +46,18 @@ class Request:
     eos_id: int = -1                   # -1: never stops early
     temperature: float = 0.0           # 0 => greedy
     extras: Optional[dict] = None      # patches / frames for vlm / audio
+    deadline_s: Optional[float] = None  # wall seconds from submit; past it
+                                        # the scheduler evicts the request
+                                        # between chunks (partial tokens,
+                                        # Completion.timed_out=True)
 
 
 @dataclasses.dataclass
 class Completion:
     tokens: np.ndarray
     steps: int
+    timed_out: bool = False            # deadline-evicted mid-decode: tokens
+                                       # hold whatever was generated in time
 
 
 def _decode_loop(cfg: ArchConfig, params, logits0, cache, cache_len, key,
@@ -166,6 +172,13 @@ class ServeEngine:
         lens = {len(r.tokens) for r in requests}
         schedulable = (supports_continuous_batching(self.cfg)
                        and all(r.extras is None for r in requests))
+        deadlines = any(r.deadline_s is not None for r in requests)
+        if deadlines and not schedulable:
+            raise ValueError(
+                "per-request deadlines are honored by the continuous "
+                "scheduler only; this architecture (or extras-carrying "
+                "batch) routes through the equal-length path, which cannot "
+                "evict mid-decode")
         # with a mesh, everything routes through the (sharded) scheduler:
         # the fast path is single-device, and silently dropping the mesh
         # would un-shard params a caller sharded because they must be
@@ -174,7 +187,7 @@ class ServeEngine:
                 "sharded serving cannot take requests with extras — they "
                 "route through the single-device fast path, dropping the "
                 "mesh")
-        if len(lens) == 1 and self.mesh is None:
+        if len(lens) == 1 and self.mesh is None and not deadlines:
             return self._generate_equal(requests)
         if schedulable:
             sched = self.scheduler

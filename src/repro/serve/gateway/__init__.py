@@ -9,7 +9,8 @@ from repro.serve.gateway.channel import (
     LOSSY_WIFI, NARROWBAND, WIFI_UDP, Channel, ChannelConfig, Delivery,
 )
 from repro.serve.gateway.control import (
-    RateController, RateProfile, default_ladder, requantize, subset_centers,
+    ERASED, RateController, RateProfile, default_ladder, keep_channels,
+    requantize, subset_centers,
 )
 from repro.serve.gateway.fleet import (
     ClientSpec, DeviceClient, Fleet, Payload, mixed_fleet,
@@ -21,8 +22,8 @@ from repro.serve.gateway.gateway import (
 __all__ = [
     "Channel", "ChannelConfig", "Delivery",
     "WIFI_UDP", "NARROWBAND", "LOSSY_WIFI",
-    "RateController", "RateProfile", "default_ladder", "requantize",
-    "subset_centers",
+    "ERASED", "RateController", "RateProfile", "default_ladder",
+    "keep_channels", "requantize", "subset_centers",
     "ClientSpec", "DeviceClient", "Fleet", "Payload", "mixed_fleet",
     "GatewayConfig", "GatewayReport", "OffloadGateway", "RequestTrace",
 ]

@@ -43,6 +43,24 @@ def default_ladder(n_centers: int) -> tuple[RateProfile, ...]:
     return tuple(ladder)
 
 
+# Degradation floor of the channel-masking ladder: no payload channel
+# survives.  The gateway zero-fills the whole offloaded feature map and
+# still serves Remote NN + combine — a lost or corrupted payload costs
+# accuracy, not a round trip (the SemanticNN posture).
+ERASED = RateProfile(bits=1, keep_frac=0.0)
+
+
+def keep_channels(prof: RateProfile, n_remote: int, full_bits: int) -> int:
+    """Transmitted-channel count of a rate profile: the full set at the
+    static profile, an importance-prefix otherwise, and zero at the
+    `ERASED` floor (the gateway zero-fills everything past this count)."""
+    if prof.keep_frac <= 0.0:
+        return 0
+    if prof.bits >= full_bits and prof.keep_frac >= 1.0:
+        return n_remote
+    return max(1, int(round(prof.keep_frac * n_remote)))
+
+
 def subset_centers(centers: np.ndarray, bits: int) -> np.ndarray:
     """Codebook of a reduced-bit profile: 2**bits centers spread evenly
     over the *sorted* learned codebook.  A bit width covering the whole

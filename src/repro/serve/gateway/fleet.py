@@ -34,7 +34,7 @@ from repro.serve.gateway.channel import (
     WIFI_UDP, NARROWBAND, LOSSY_WIFI, Channel, ChannelConfig,
 )
 from repro.serve.gateway.control import (
-    RateController, default_ladder, requantize, subset_centers,
+    RateController, default_ladder, keep_channels, requantize, subset_centers,
 )
 from repro.serve.offload import local_path_macs, remote_nn_macs
 
@@ -45,17 +45,39 @@ class ClientSpec:
     arrival_rate_hz: float = 25.0      # Poisson inference arrivals
     n_requests: int = 4
     slo_ms: "float | None" = None      # None => static configuration
+    deadline_ms: "float | None" = None  # per-request deadline: the radio
+                                        # stops retrying past it, the
+                                        # gateway sheds on admission miss,
+                                        # and the request resolves as a
+                                        # Local-NN fallback
+
+    def __post_init__(self):
+        def bad(field, why):
+            raise ValueError(f"ClientSpec.{field} {why} "
+                             f"(got {getattr(self, field)!r})")
+        if not isinstance(self.channel, ChannelConfig):
+            bad("channel", "must be a ChannelConfig")
+        if not self.arrival_rate_hz > 0:
+            bad("arrival_rate_hz", "must be > 0")
+        if self.n_requests < 0:
+            bad("n_requests", "must be >= 0")
+        if self.slo_ms is not None and not self.slo_ms > 0:
+            bad("slo_ms", "must be > 0 (or None for the static profile)")
+        if self.deadline_ms is not None and not self.deadline_ms > 0:
+            bad("deadline_ms", "must be > 0 (or None for no deadline)")
 
 
 def mixed_fleet(n_clients: int, *, n_requests: int = 4,
                 arrival_rate_hz: float = 25.0,
                 channels: tuple[ChannelConfig, ...] = (
                     WIFI_UDP, NARROWBAND, LOSSY_WIFI),
-                slo_ms: "float | None" = None) -> tuple[ClientSpec, ...]:
+                slo_ms: "float | None" = None,
+                deadline_ms: "float | None" = None) -> tuple[ClientSpec, ...]:
     """Round-robin mix of link types across the fleet."""
     return tuple(ClientSpec(channel=channels[i % len(channels)],
                             arrival_rate_hz=arrival_rate_hz,
-                            n_requests=n_requests, slo_ms=slo_ms)
+                            n_requests=n_requests, slo_ms=slo_ms,
+                            deadline_ms=deadline_ms)
                  for i in range(n_clients))
 
 
@@ -175,10 +197,7 @@ class Fleet:
         profile, served from the per-profile fleet-wide codec cache."""
         prof = client.controller.profile()
         row = client.row0 + req
-        if prof.bits >= self.full_bits and prof.keep_frac >= 1.0:
-            keep = self.n_remote
-        else:
-            keep = max(1, int(round(prof.keep_frac * self.n_remote)))
+        keep = keep_channels(prof, self.n_remote, self.full_bits)
         nbytes, codes = self._encoded_rows(prof.bits, keep)[row]
         return Payload(client=client.index, req=req, bits=prof.bits,
                        keep=keep, count=self.feat_hw * self.feat_hw * keep,

@@ -6,34 +6,56 @@ over lossy rate-limited links (`Channel`) into a gateway that batches
 arrivals into fixed-width Remote-NN inference calls and returns combined
 logits with per-request end-to-end latency and device-energy accounting.
 
-Time is discrete-event simulated (a (time, seq) heap; seq breaks ties
-FIFO, so runs are deterministic), while the Remote-NN logits are *actually
-computed*: arriving payloads are LZW-decoded, batch-bit-unpacked,
-dequantized and run through a jit'd `remote_forward` over a fixed-width
-feature slot pool — the continuous scheduler's admit/evict discipline
-applied to feature batches, with one compiled program per pool shape.
-Requests admit into free `SlotPool` slots when a batch launches and
-release them when it completes; arrivals beyond the pool width queue for
-the next launch.
+Time is discrete-event simulated (a (time, prio, seq) heap; prio breaks
+same-instant ties toward the earliest deadline and seq keeps the rest
+FIFO, so runs are deterministic), while the Remote-NN logits are
+*actually computed*: arriving payloads are LZW-decoded, batch-bit-
+unpacked, dequantized and run through a jit'd `remote_forward` over a
+fixed-width feature slot pool — the continuous scheduler's admit/evict
+discipline applied to feature batches, with one compiled program per
+pool shape.  Requests admit into free `SlotPool` slots when a batch
+launches and release them when it completes; arrivals beyond the pool
+width queue for the next launch.
 
-With no SLO set every client stays on the static rate profile and the
-gateway's logits are bit-identical to `run_offload_inference` on each
-request's image alone (tested); with an SLO, per-client `RateController`s
-trade quantization bits / offloaded-channel fraction against the
-measured latency.
+Failure posture (`repro.serve.faults` wires the faults in): every layer
+responds instead of hanging, stepping down a degradation ladder —
+
+  * served    — payload decoded, Remote NN + combine (the clean path);
+  * degraded  — the payload arrived corrupted (`PayloadCorruptionError`
+    or a framing-length mismatch): the gateway zero-fills every
+    offloaded channel (`control.ERASED`, the keep-prefix masking taken
+    to its floor) and still serves Remote NN + combine — accuracy pays,
+    not a round trip;
+  * shed      — the payload arrived, but its deadline passed before (or
+    lapses at) batch admission: the gateway drops it and the device uses
+    its Local-NN logits;
+  * fallback  — the radio gave up (retry budget or deadline exhausted on
+    a dark link): the device serves its own Local-NN logits, bit-
+    identical to the standalone local path, the moment it stops retrying.
+
+Requests carrying deadlines admit earliest-deadline-first; with none set
+admission is FIFO and every code path is bit-identical to the fault-free
+gateway.  With no SLO set every client stays on the static rate profile
+and the gateway's logits are bit-identical to `run_offload_inference` on
+each request's image alone (tested); with an SLO, per-client
+`RateController`s trade quantization bits / offloaded-channel fraction
+against the measured latency.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+import math
 import time
 from functools import partial
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.lzw import lzw_decode, unpack_indices_batch
+from repro.compress.lzw import (
+    PayloadCorruptionError, lzw_decode, packed_nbytes, unpack_indices_batch,
+)
 from repro.configs.agilenn_cifar import AgileNNConfig
 from repro.core.agile import remote_forward_jit
 from repro.serve.device_model import DeviceModel
@@ -46,6 +68,14 @@ class GatewayConfig:
     batch_width: int = 8        # Remote-NN feature slot pool width
     batch_window_s: float = 2e-3  # idle gateway waits this long after an
                                   # arrival for the pool to fill
+
+    def __post_init__(self):
+        if self.batch_width < 1:
+            raise ValueError(f"GatewayConfig.batch_width must be >= 1 "
+                             f"(got {self.batch_width!r})")
+        if self.batch_window_s < 0:
+            raise ValueError(f"GatewayConfig.batch_window_s must be >= 0 "
+                             f"(got {self.batch_window_s!r})")
 
 
 @dataclasses.dataclass
@@ -67,6 +97,8 @@ class RequestTrace:
     logits: np.ndarray
     pred: int
     label: int
+    status: str = "served"     # served | degraded | shed | fallback
+    deadline_missed: bool = False
 
 
 @dataclasses.dataclass
@@ -93,6 +125,24 @@ class GatewayReport:
     def device_energy_mj(self) -> float:
         return float(np.mean([t.energy_j for t in self.traces])) * 1e3
 
+    def status_rate(self, *statuses: str) -> float:
+        return float(np.mean([t.status in statuses for t in self.traces]))
+
+    @property
+    def fallback_rate(self) -> float:
+        """Fraction of requests resolved by Local-NN logits alone (the
+        radio gave up, or the gateway shed a missed deadline)."""
+        return self.status_rate("fallback", "shed")
+
+    @property
+    def degraded_rate(self) -> float:
+        """Fraction served with zero-filled (erased) payload channels."""
+        return self.status_rate("degraded")
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return float(np.mean([t.deadline_missed for t in self.traces]))
+
     def summary(self) -> dict:
         by_channel: dict[str, list[float]] = {}
         for t in self.traces:
@@ -111,6 +161,9 @@ class GatewayReport:
             "bits_mean": float(np.mean([t.bits for t in self.traces])),
             "accuracy": float(np.mean(
                 [t.pred == t.label for t in self.traces])),
+            "fallback_rate": self.fallback_rate,
+            "degraded_rate": self.degraded_rate,
+            "deadline_miss_rate": self.deadline_miss_rate,
             "sim_s": self.sim_s,
             "p50_ms_by_channel": {k: float(np.percentile(v, 50))
                                   for k, v in sorted(by_channel.items())},
@@ -129,18 +182,21 @@ class _InFlight:
     energy_j: float
     t_serve: float = 0.0       # stamped when the batch launches
     slot: int = -1             # pool slot (= Remote-NN batch row) occupied
+    deadline: float = math.inf  # absolute; heap/admission priority
+    status: str = "served"     # downgraded to "degraded" on erasure
 
 
 class OffloadGateway:
     def __init__(self, cfg: AgileNNConfig, params, fleet: Fleet,
                  gw: "GatewayConfig | None" = None, *,
-                 server: "DeviceModel | None" = None):
+                 server: "DeviceModel | None" = None, faults=None):
         assert fleet.cfg is cfg or fleet.cfg == cfg
         self.cfg = cfg
         self.params = params
         self.fleet = fleet
         self.gw = gw or GatewayConfig()
         self.server = server or DeviceModel()
+        self.faults = faults               # repro.serve.faults.FaultInjector
         self._slots = SlotPool(self.gw.batch_width)
         # one compiled program per pool shape, cached module-wide
         self._remote = partial(remote_forward_jit,
@@ -151,7 +207,10 @@ class OffloadGateway:
         """Decode payloads -> dequantize -> one fixed-width Remote-NN +
         combine call.  Rows are grouped by radio framing so the bit
         unpack runs vectorized per group; channels beyond a payload's
-        importance prefix stay zero."""
+        importance prefix stay zero.  A payload that fails to decode
+        (corruption) keeps its WHOLE row zero — the `control.ERASED`
+        floor of the masking ladder — and is marked degraded; the call
+        still serves it."""
         W = self.gw.batch_width
         fh, Cr = self.fleet.feat_hw, self.fleet.n_remote
         deq = np.zeros((W, fh, fh, Cr), np.float32)
@@ -162,23 +221,37 @@ class OffloadGateway:
             ll[item.slot] = self.fleet.local_logits[item.client.row0 + p.req]
             groups.setdefault((p.bits, p.keep, p.count), []).append(item)
         for (bits, keep, count), members in groups.items():
-            packed = [lzw_decode(it.payload.codes) for it in members]
+            ok, packed = [], []
+            expect = packed_nbytes(bits, count)
+            for it in members:
+                try:
+                    data = lzw_decode(it.payload.codes)
+                except PayloadCorruptionError:
+                    it.status = "degraded"
+                    continue
+                if len(data) != expect:    # framing mismatch: erased too
+                    it.status = "degraded"
+                    continue
+                ok.append(it)
+                packed.append(data)
+            if not ok:
+                continue
             idx = unpack_indices_batch(packed, bits, count)
             vals = self.fleet.centers_for(bits)[idx]
-            rows = [it.slot for it in members]
+            rows = [it.slot for it in ok]
             deq[rows, :, :, :keep] = vals.reshape(-1, fh, fh, keep)
         out = self._remote(self.params, jnp.asarray(deq), jnp.asarray(ll))
         return np.asarray(out)
 
     # -------------------------------------------------------- event loop --
     def run(self) -> GatewayReport:
-        fleet, gw = self.fleet, self.gw
+        fleet, gw, faults = self.fleet, self.gw, self.faults
         t_wall = time.perf_counter()
         seq = itertools.count()
         heap: list[tuple] = []
 
-        def push(t: float, kind: str, data) -> None:
-            heapq.heappush(heap, (t, next(seq), kind, data))
+        def push(t: float, kind: str, data, prio: float = 0.0) -> None:
+            heapq.heappush(heap, (t, prio, next(seq), kind, data))
 
         next_req = [0] * len(fleet.clients)
         for c in fleet.clients:
@@ -191,9 +264,45 @@ class OffloadGateway:
         traces: list[RequestTrace] = []
         t_end = 0.0
 
+        def resolve_local(item: _InFlight, t_done: float, status: str,
+                          missed: bool) -> None:
+            """Degradation floor: the device answers with its own
+            Local-NN logits (bit-identical to the standalone local path —
+            they were computed before the radio ever keyed up)."""
+            nonlocal t_end
+            p = item.payload
+            row = item.client.row0 + p.req
+            lrow = fleet.local_logits[row]
+            e2e = t_done - item.t_born
+            item.client.controller.observe(e2e)
+            traces.append(RequestTrace(
+                client=item.client.index, req=p.req,
+                channel=item.client.spec.channel.name,
+                bits=p.bits, keep=p.keep, payload_bytes=p.nbytes,
+                attempts=item.attempts, t_born=item.t_born,
+                t_sent=item.t_sent, t_arrive=item.t_arrive,
+                t_serve=t_done, t_done=t_done, e2e_s=e2e,
+                energy_j=item.energy_j, logits=lrow.copy(),
+                pred=int(np.argmax(lrow)),
+                label=int(fleet.labels[row]),
+                status=status, deadline_missed=missed))
+            t_end = max(t_end, t_done)
+
         def start_batch(t0: float) -> None:
             epoch[0] += 1                    # pending window flushes lapse
-            free = self._slots.free()
+            # shed-on-miss: a queued request whose deadline has lapsed by
+            # launch time is pointless to serve — resolve it as a local
+            # fallback (the device stopped waiting at its deadline)
+            missed = [it for it in queue if it.deadline <= t0]
+            if missed:
+                queue[:] = [it for it in queue if it.deadline > t0]
+                for it in missed:
+                    resolve_local(it, it.deadline, "shed", True)
+                if not queue:
+                    return
+            if any(it.deadline < math.inf for it in queue):
+                queue.sort(key=lambda it: it.deadline)   # EDF; stable ->
+            free = self._slots.free()                    # FIFO inside ties
             take, queue[:] = queue[:len(free)], queue[len(free):]
             for slot, item in zip(free, take):
                 self._slots.acquire(slot, item)
@@ -203,28 +312,53 @@ class OffloadGateway:
                 item.t_serve = t0
             service = self.server.server_time(
                 len(take) * fleet.remote_macs)
+            if faults is not None:           # stalled slot pool: the batch
+                service += faults.server_stall_extra(t0)   # holds its slots
             busy[0] = True
             push(t0 + service, "serve", (take, logits))
 
         while heap:
-            t, _, kind, data = heapq.heappop(heap)
+            t, _, _, kind, data = heapq.heappop(heap)
             if kind == "dev":
                 c = fleet.clients[data]
                 j = next_req[data]
                 payload = fleet.make_payload(c, j)   # profile at send time
                 t_compute = fleet.compute_time(c)
+                if faults is not None:
+                    t_compute += faults.device_stall_extra(data, t)
                 t_sent = t + t_compute
-                d = c.channel.transmit(payload.nbytes, t_sent)
+                deadline = (c.born[j] + c.spec.deadline_ms * 1e-3
+                            if c.spec.deadline_ms is not None else math.inf)
+                d = c.channel.transmit(
+                    payload.nbytes, t_sent,
+                    deadline_s=None if deadline == math.inf else deadline,
+                    link=faults.link(data) if faults is not None else None)
                 energy = (c.device.p_cpu_w * t_compute
                           + c.device.p_tx_w * d.airtime_s)
-                push(d.arrive_s, "recv", _InFlight(
+                item = _InFlight(
                     payload=payload, client=c, t_born=c.born[j], t_start=t,
                     t_sent=t_sent, t_arrive=d.arrive_s,
-                    attempts=d.attempts, energy_j=energy))
+                    attempts=d.attempts, energy_j=energy, deadline=deadline)
+                if faults is not None and d.delivered:
+                    bad = faults.corrupt(data, t_sent, payload.codes)
+                    if bad is not None:
+                        item.payload = dataclasses.replace(payload,
+                                                           codes=bad)
+                if d.delivered:
+                    push(d.arrive_s, "recv", item,
+                         prio=deadline if deadline < math.inf else 0.0)
+                else:
+                    # radio gave up (dark link or deadline): Local-NN
+                    # fallback at the moment it stopped retrying
+                    resolve_local(item, d.device_free_s, "fallback",
+                                  d.expired)
                 next_req[data] = j + 1
                 if j + 1 < c.spec.n_requests:
                     push(max(d.device_free_s, c.born[j + 1]), "dev", data)
             elif kind == "recv":
+                if data.deadline <= t:       # landed past its deadline:
+                    resolve_local(data, data.deadline, "shed", True)
+                    continue                 # the device already gave up
                 queue.append(data)
                 if not busy[0]:
                     if len(queue) >= gw.batch_width:
@@ -258,7 +392,9 @@ class OffloadGateway:
                     t_serve=item.t_serve, t_done=t, e2e_s=e2e,
                     energy_j=item.energy_j, logits=lrow.copy(),
                     pred=int(np.argmax(lrow)),
-                    label=int(self.fleet.labels[row])))
+                    label=int(self.fleet.labels[row]),
+                    status=item.status,
+                    deadline_missed=t > item.deadline))
                 t_end = max(t_end, t)
 
         t_begin = min(float(c.born[0]) for c in fleet.clients

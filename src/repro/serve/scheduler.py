@@ -70,6 +70,7 @@ equal-length grouping elsewhere.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from functools import partial
 from typing import Optional
@@ -166,7 +167,13 @@ class ContinuousScheduler:
 
     def __init__(self, cfg: ArchConfig, params, *,
                  sched: Optional[SchedulerConfig] = None,
-                 max_len: int = 256, seed: int = 0, mesh=None):
+                 max_len: int = 256, seed: int = 0, mesh=None,
+                 clock=None, faults=None):
+        """clock: wall-time source for request deadlines (default
+        `time.monotonic`; tests inject a fake for determinism).
+        faults: a `repro.serve.faults.FaultInjector` whose
+        `chunk_stalled(round)` stalls decode rounds — requests then leave
+        through deadline eviction instead of hanging the drain loop."""
         assert supports_continuous_batching(cfg), \
             f"{cfg.name}: continuous batching needs a pure-attention " \
             "RoPE decoder (use ServeEngine's equal-length grouping)"
@@ -175,6 +182,10 @@ class ContinuousScheduler:
         self.sched = sched or SchedulerConfig()
         self.max_len = max_len
         self.mesh = mesh
+        self.faults = faults
+        self._clock = clock if clock is not None else time.monotonic
+        self._deadlines: dict[int, float] = {}   # rid -> absolute clock()
+        self._round = 0
         self._key = jax.random.PRNGKey(seed)
         S = self.sched.max_slots
         L = max_len
@@ -329,6 +340,9 @@ class ContinuousScheduler:
             "the continuous scheduler serves token-only requests"
         rid = self._next_rid
         self._next_rid += 1
+        if getattr(request, "deadline_s", None) is not None:
+            assert request.deadline_s > 0, "deadline_s must be > 0"
+            self._deadlines[rid] = self._clock() + request.deadline_s
         self._queue.append((rid, request))
         return rid
 
@@ -500,7 +514,8 @@ class ContinuousScheduler:
         return np.asarray([r is not None and i not in stag
                            for i, r in enumerate(self._slot_rid)])
 
-    def _complete(self, fin: list[int], buf, gen) -> list[int]:
+    def _complete(self, fin: list[int], buf, gen, *,
+                  timed_out: bool = False) -> list[int]:
         """Release finished slots and record their Completions; freed
         slots drop to depth 0 so the paged decode kernel's max-depth
         branch follows live occupancy."""
@@ -508,11 +523,58 @@ class ContinuousScheduler:
         out = []
         for i in fin:
             rid = self._slots.release(i)
+            self._deadlines.pop(rid, None)
             self._results[rid] = Completion(
-                buf[i, :gen[i]].astype(np.int32), int(gen[i]))
+                buf[i, :gen[i]].astype(np.int32), int(gen[i]),
+                timed_out=timed_out)
             out.append(rid)
         self._pool["cache_len"] = (
             self._pool["cache_len"].at[jnp.asarray(fin)].set(0))
+        return out
+
+    # ------------------------------------------------------ deadlines --
+
+    def _expire_deadlines(self) -> list[int]:
+        """Deadline-evict, between chunks, every request whose deadline
+        has lapsed: queued requests resolve empty, a staging admission
+        aborts its prefill and frees its slot, pooled slots evict with
+        the tokens generated so far.  A request past its deadline never
+        occupies device work again — under a stalled pool this is the
+        exit that keeps `run()` from hanging."""
+        if not self._deadlines:
+            return []
+        from repro.serve.engine import Completion
+        now = self._clock()
+        expired = {rid for rid, at in self._deadlines.items() if at <= now}
+        if not expired:
+            return []
+        out = []
+        # queued, never admitted: nothing was generated in time
+        keep = deque()
+        for rid, req in self._queue:
+            if rid in expired:
+                self._results[rid] = Completion(
+                    np.zeros((0,), np.int32), 0, timed_out=True)
+                self._deadlines.pop(rid)
+                out.append(rid)
+            else:
+                keep.append((rid, req))
+        self._queue = keep
+        # staging: abort the chunked prefill, free its claimed slot
+        for st in [s for s in self._staging if s["rid"] in expired]:
+            self._staging.remove(st)
+            self._slots.release(st["slot"])
+            self._deadlines.pop(st["rid"])
+            self._results[st["rid"]] = Completion(
+                np.zeros((0,), np.int32), 0, timed_out=True)
+            out.append(st["rid"])
+        # pooled: evict with partial tokens (host copy like _drain's)
+        fin = [i for i, rid in enumerate(self._slot_rid)
+               if rid in expired]
+        if fin:
+            out.extend(self._complete(
+                fin, np.asarray(self._pool["buf"]),
+                np.asarray(self._pool["gen"]), timed_out=True))
         return out
 
     def _drain(self) -> list[int]:
@@ -561,7 +623,12 @@ class ContinuousScheduler:
 
     def _dispatch_chunk(self) -> Optional[np.ndarray]:
         """Dispatch one decode chunk over the occupied non-staging slots;
-        returns the active mask used (None when nothing is decodable)."""
+        returns the active mask used (None when nothing is decodable, or
+        when a fault has this round's executor stalled — deadlines keep
+        aging either way)."""
+        if self.faults is not None and \
+                self.faults.chunk_stalled(self._round - 1):
+            return None
         active = self._active_mask()
         if not active.any():
             return None
@@ -577,15 +644,20 @@ class ContinuousScheduler:
         chunk, block on the drain.  Overlap mode pipelines the same round
         against the device (see `_step_overlapped`).  Returns completed
         request ids (overlap mode reports a completion one round after
-        its chunk, once its async done-copy has landed)."""
+        its chunk, once its async done-copy has landed).  Expired
+        deadlines evict first, so a deadline-carrying request never costs
+        another prefill segment or decode chunk past its budget."""
+        self._round += 1                # 0-based round index while inside:
+                                        # _dispatch_chunk sees _round - 1
+        expired = self._expire_deadlines()
         if self.sched.overlap:
-            return self._step_overlapped()
+            return expired + self._step_overlapped()
         self._advance_staging()
         for g in self._plan_admissions():
             self._launch_group(g)
         if self._dispatch_chunk() is None:
-            return []
-        return self._drain()
+            return expired
+        return expired + self._drain()
 
     def _step_overlapped(self) -> list[int]:
         """One pipelined round: round k's prefill work is dispatched, and

@@ -212,3 +212,175 @@ def test_scheduler_rejects_unsupported_arch():
     assert not supports_continuous_batching(cfg)
     with pytest.raises(AssertionError):
         ContinuousScheduler(cfg, bb.init_params(cfg, KEY), max_len=32)
+
+
+# ------------------------------------------------- deadlines and faults ---
+
+
+class _Clock:
+    """Deterministic wall clock: every read advances by one tick."""
+
+    def __init__(self, tick: float):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
+
+
+def _fault_sched(cfg, params, *, overlap=False, clock=None, faults=None,
+                 **kw):
+    base = dict(buckets=(8, 16, 32), max_slots=2, prefill_group=1, chunk=2,
+                prefill_segment=8, overlap=overlap)
+    base.update(kw)
+    return ContinuousScheduler(cfg, params, max_len=64,
+                               sched=SchedulerConfig(**base),
+                               clock=clock, faults=faults)
+
+
+def test_deadline_evicts_queued_and_pooled(system):
+    """An expired queued request resolves empty; a pooled request evicts
+    between chunks with the tokens generated so far — a prefix of its
+    reference decode — and a deadline-free neighbour is untouched."""
+    cfg, params = system
+    eng = _engine(cfg, params)
+    rng = np.random.RandomState(7)
+    pa = rng.randint(0, cfg.vocab, 8)
+    pb = rng.randint(0, cfg.vocab, 8)
+    pc = rng.randint(0, cfg.vocab, 8)
+    ref_a = _reference(eng, Request(tokens=pa, max_new_tokens=40))
+    ref_b = _reference(eng, Request(tokens=pb, max_new_tokens=4))
+
+    sched = _fault_sched(cfg, params, clock=_Clock(0.01))
+    ra = sched.submit(Request(tokens=pa, max_new_tokens=40, deadline_s=0.055))
+    rb = sched.submit(Request(tokens=pb, max_new_tokens=4))
+    rc = sched.submit(Request(tokens=pc, max_new_tokens=4, deadline_s=0.001))
+    outs = sched.run()
+    assert sorted(outs) == sorted([ra, rb, rc])
+    assert outs[rc].timed_out and len(outs[rc].tokens) == 0
+    assert outs[ra].timed_out
+    assert 0 < len(outs[ra].tokens) < 40
+    np.testing.assert_array_equal(outs[ra].tokens,
+                                  ref_a[:len(outs[ra].tokens)])
+    assert not outs[rb].timed_out
+    np.testing.assert_array_equal(outs[rb].tokens, ref_b)
+    assert not sched._slots.any_occupied() and not sched._deadlines
+
+
+def test_deadline_aborts_staging_and_slot_is_reused(system):
+    """A chunked-prefill admission whose deadline lapses mid-staging
+    frees its claimed slot; a later request reuses the slot and decodes
+    its reference tokens."""
+    cfg, params = system
+    eng = _engine(cfg, params)
+    rng = np.random.RandomState(8)
+    long_p = rng.randint(0, cfg.vocab, 32)
+    short_p = rng.randint(0, cfg.vocab, 8)
+    ref_short = _reference(eng, Request(tokens=short_p, max_new_tokens=3))
+
+    sched = _fault_sched(cfg, params, clock=_Clock(0.01), max_slots=1)
+    rl = sched.submit(Request(tokens=long_p, max_new_tokens=4,
+                              deadline_s=0.015))
+    rs = sched.submit(Request(tokens=short_p, max_new_tokens=3))
+    outs = sched.run()
+    assert outs[rl].timed_out and len(outs[rl].tokens) == 0
+    np.testing.assert_array_equal(outs[rs].tokens, ref_short)
+    assert not sched._slots.any_occupied()
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_stalled_pool_exits_via_deadline_eviction(system, overlap):
+    """Acceptance: a permanently stalled decode pool cannot hang run() —
+    every deadline-carrying request leaves through deadline eviction."""
+    from repro.serve.faults import FaultInjector, SlotPoolStall
+    cfg, params = system
+    rng = np.random.RandomState(9)
+    sched = _fault_sched(cfg, params, overlap=overlap, clock=_Clock(0.01),
+                         faults=FaultInjector((SlotPoolStall(),)))
+    rids = [sched.submit(Request(tokens=rng.randint(0, cfg.vocab, 8),
+                                 max_new_tokens=4, deadline_s=0.04))
+            for _ in range(4)]
+    outs = sched.run()
+    assert sorted(outs) == sorted(rids)
+    assert all(outs[r].timed_out for r in rids)
+    assert not sched._slots.any_occupied()
+
+
+def test_bounded_stall_only_delays_decode(system):
+    """A stall window without deadlines delays rounds but changes no
+    tokens — requests decode their exact reference output after it."""
+    from repro.serve.faults import FaultInjector, SlotPoolStall
+    cfg, params = system
+    eng = _engine(cfg, params)
+    rng = np.random.RandomState(10)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab, L), max_new_tokens=4)
+            for L in (8, 16, 8)]
+    sched = _fault_sched(cfg, params,
+                         faults=FaultInjector((SlotPoolStall(0, 3),)))
+    rids = [sched.submit(r) for r in reqs]
+    outs = sched.run()
+    for r, rid in zip(reqs, rids):
+        assert not outs[rid].timed_out
+        np.testing.assert_array_equal(outs[rid].tokens, _reference(eng, r))
+
+
+def test_idle_injector_and_generous_deadlines_keep_tokens(system):
+    """Acceptance (bit-identity): an empty fault schedule and deadlines
+    that never fire leave the scheduler's greedy tokens unchanged, in
+    both overlap modes."""
+    from repro.serve.faults import FaultInjector
+    cfg, params = system
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, cfg.vocab, L) for L in (8, 16, 32, 8)]
+
+    def tokens(deadline, faults, overlap):
+        sched = _fault_sched(cfg, params, overlap=overlap, faults=faults)
+        rids = [sched.submit(Request(tokens=p, max_new_tokens=4,
+                                     deadline_s=deadline))
+                for p in prompts]
+        outs = sched.run()
+        assert not any(outs[r].timed_out for r in rids)
+        return [outs[r].tokens for r in rids]
+
+    for overlap in (False, True):
+        plain = tokens(None, None, overlap)
+        faulted = tokens(1e6, FaultInjector(()), overlap)
+        for a, b in zip(plain, faulted):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_deadline_churn_preserves_slot_invariants(system):
+    """Satellite: repeated deadline-evict/readmit cycles on a width-2
+    pool never leak or double-assign a slot, and every rid resolves
+    exactly once (overlap mode's stale snapshot must not complete a
+    readmitted slot's new occupant)."""
+    cfg, params = system
+    rng = np.random.RandomState(12)
+    sched = _fault_sched(cfg, params, overlap=True, clock=_Clock(0.005))
+    rids = []
+    for i in range(12):
+        rids.append(sched.submit(Request(
+            tokens=rng.randint(0, cfg.vocab, 8), max_new_tokens=30,
+            deadline_s=0.03 + 0.015 * (i % 4))))
+    outs = sched.run()
+    assert sorted(outs) == sorted(rids)       # exactly once each
+    assert all(outs[r].timed_out for r in rids)
+    assert not sched._slots.any_occupied() and not sched._deadlines
+    assert not sched._staging and sched._pending is None
+
+
+def test_engine_routes_deadlines_through_scheduler(system):
+    """Equal-length requests carrying deadlines leave the fast path (it
+    cannot evict) and still produce the fast path's tokens when the
+    deadline never fires."""
+    cfg, params = system
+    eng = _engine(cfg, params)
+    rng = np.random.RandomState(13)
+    p = rng.randint(0, cfg.vocab, 16)
+    ref = _reference(eng, Request(tokens=p, max_new_tokens=4))
+    outs = eng.generate([Request(tokens=p, max_new_tokens=4,
+                                 deadline_s=1e6)])
+    assert eng._sched is not None             # scheduler path was taken
+    assert not outs[0].timed_out
+    np.testing.assert_array_equal(outs[0].tokens, ref)

@@ -23,7 +23,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
                          "kernels, serve, serve_sharded, gateway, faults, "
-                         "roofline)")
+                         "prefix, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
@@ -46,6 +46,7 @@ def main(argv=None) -> None:
     from benchmarks.gateway import gateway_rows
     from benchmarks.kernel_micro import kernel_micro_rows
     from benchmarks.paper_figures import ALL_FIGURES
+    from benchmarks.prefix_cache import prefix_cache_rows
     from benchmarks.roofline_table import roofline_rows
     from benchmarks.serve_sharded import serve_sharded_rows
     from benchmarks.serve_steady import serve_steady_rows
@@ -57,6 +58,7 @@ def main(argv=None) -> None:
     suites["serve_sharded"] = serve_sharded_rows
     suites["gateway"] = gateway_rows
     suites["faults"] = faults_rows
+    suites["prefix"] = prefix_cache_rows
     suites["roofline"] = roofline_rows
 
     if args.only:
@@ -65,7 +67,7 @@ def main(argv=None) -> None:
         # serve_sharded is not in the default smoke set: its rows pin the
         # device topology, and only the multi-device CI job (forced
         # 8-device mesh, --only serve_sharded) has baseline rows to match
-        selected = ["kernels", "serve", "gateway", "faults"]
+        selected = ["kernels", "serve", "gateway", "faults", "prefix"]
     else:
         selected = list(suites)
     print("name,value,derived")

@@ -34,12 +34,25 @@ def _serve_queue(cfg, params, args) -> int:
         data, model = dims[0], (dims[1] if len(dims) > 1 else 1)
         mesh = make_serving_mesh(data=data, model=model)
     lengths = tuple(int(x) for x in args.lengths.split(","))
-    max_len = max(lengths) + args.tokens + 8
+    rng = np.random.RandomState(0)
+    shared = np.zeros((0,), np.int32)
+    if args.prefix_cache:
+        # shared-prefix workload: every prompt opens with the same
+        # "system prompt" (page-aligned so it populates whole cache
+        # pages) and diverges in its tail
+        page = SchedulerConfig().page_size
+        n_pages = max(1, max(lengths) // page)
+        shared = rng.randint(0, cfg.vocab, n_pages * page)
+    max_len = len(shared) + max(lengths) + args.tokens + 8
     eng = ServeEngine(cfg, params, max_len=max_len, mesh=mesh,
                       scheduler=SchedulerConfig(
-                          buckets=lengths, overlap=not args.serialized))
-    rng = np.random.RandomState(0)
-    reqs = [Request(tokens=rng.randint(0, cfg.vocab, rng.choice(lengths)),
+                          buckets=tuple(len(shared) + b for b in lengths),
+                          overlap=not args.serialized,
+                          prefix_cache=args.prefix_cache,
+                          kv_tier_mb=args.kv_tier_mb))
+    reqs = [Request(tokens=np.concatenate(
+                        [shared, rng.randint(0, cfg.vocab,
+                                             rng.choice(lengths))]),
                     max_new_tokens=args.tokens)
             for _ in range(args.queue)]
     t0 = time.time()
@@ -50,6 +63,14 @@ def _serve_queue(cfg, params, args) -> int:
             if mesh is not None else "")
     print(f"served {len(reqs)} mixed-length requests{topo} "
           f"({toks} tokens) in {dt:.2f}s -> {toks / dt:.1f} tok/s")
+    if args.prefix_cache:
+        pc = eng.scheduler.prefix
+        print(f"prefix cache: hit_rate {pc.hit_rate:.2f} over "
+              f"{pc.stats['page_lookups']} page lookups, "
+              f"{pc.n_hot} hot / {pc.n_cold} cold pages resident, "
+              f"cold tier {pc.cold_used_bytes / 2**20:.2f} MiB "
+              f"({pc.stats['demotions']} demotions, "
+              f"{pc.stats['promotions']} promotions)")
     return 0
 
 
@@ -103,6 +124,16 @@ def main(argv=None) -> int:
     ap.add_argument("--serialized", action="store_true",
                     help="disable the overlapped prefill/decode pipeline "
                          "(A/B baseline: host syncs every round)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across --queue "
+                         "admissions (the queue's prompts then open with "
+                         "a common system prompt); hits seed resident "
+                         "pages and prefill only the suffix")
+    ap.add_argument("--kv-tier-mb", type=float, default=0.0,
+                    help="host cold-tier budget (MiB) for prefix pages "
+                         "demoted off the device, compressed with the "
+                         "quantize+bit-pack payload codec (0: demoted "
+                         "pages are dropped)")
     ap.add_argument("--gateway", type=int, default=0, metavar="N",
                     help="simulate N weak-device clients through the "
                          "multi-client offload gateway")

@@ -165,6 +165,12 @@ class Channel:
                 delivered, expired = False, True   # no retry can land in time
                 break
             t += wait
+        if delivered and deadline_s is not None and t >= deadline_s:
+            # the attempt itself overran the deadline (a slow link's
+            # serialization alone can): a late arrival is a deadline miss,
+            # not a delivery — report it like a stopped retry so the
+            # caller degrades instead of pushing a stale payload upstream
+            delivered, expired = False, True
         # fault-free fast path keeps the seed's closed-form airtime
         airtime = airtime if scaled else attempts * ser
         if not delivered:

@@ -100,6 +100,17 @@ class SchedulerConfig:
                                # in-flight decode chunk: drain one round
                                # behind, prepare admissions while the
                                # device runs (False: serialized rounds)
+    prefix_cache: bool = False  # share prompt-prefix KV pages across
+                                # admissions (serve.prefix_cache): hits
+                                # seed resident pages and prefill only
+                                # the suffix
+    prefix_hot_pages: int = 512  # device-resident page budget; pages a
+                                 # live slot references are pinned past it
+    kv_tier_mb: float = 0.0    # host cold-tier budget for demoted pages,
+                               # quantize+bit-pack compressed (0: demoted
+                               # pages drop instead — bit-exact, no reuse
+                               # after demotion)
+    kv_tier_bits: int = 8      # cold-tier codebook bits per element
 
 
 def supports_continuous_batching(cfg: ArchConfig) -> bool:
@@ -233,6 +244,13 @@ class ContinuousScheduler:
         self._results: dict[int, object] = {}
         self._next_rid = 0
         self._pending: Optional[dict] = None   # in-flight chunk snapshot
+        self.prefix = None
+        if self.sched.prefix_cache:
+            from repro.serve.prefix_cache import PrefixCache
+            self.prefix = PrefixCache(
+                page, hot_pages=self.sched.prefix_hot_pages,
+                cold_bytes=int(self.sched.kv_tier_mb * (1 << 20)),
+                bits=self.sched.kv_tier_bits)
 
         def _prefill(params, tokens, lengths, *, max_len):
             return bb.prefill(cfg, params, {"tokens": tokens},
@@ -326,7 +344,12 @@ class ContinuousScheduler:
     def _bucket_of(self, prompt_len: int) -> int:
         fits = [b for b in self.sched.buckets
                 if prompt_len <= b <= self.max_len]
-        return min(fits) if fits else prompt_len
+        if fits:
+            return min(fits)
+        # a prompt above every configured bucket still buckets at page
+        # granularity: returning the raw length would compile a fresh
+        # prefill per distinct long-prompt length
+        return min(round_up(prompt_len, self.sched.page_size), self.max_len)
 
     def submit(self, request) -> int:
         T = len(request.tokens)
@@ -368,6 +391,13 @@ class ContinuousScheduler:
         seg = self.sched.prefill_segment
         return bool(seg) and self._bucket_of(len(req.tokens)) > seg
 
+    def _has_hit(self, req) -> bool:
+        """True when the request's leading pages are resident: it will
+        admit through a prefix plan when it leads, so group formation
+        skips it (a group row would re-prefill the prefix)."""
+        return (self.prefix is not None
+                and self.prefix.lookup(req.tokens)[1] > 0)
+
     def _plan_one(self):
         """Form one admission decision from the queue head: a bucket
         group (returned as a prepared dict of numpy prefill inputs, its
@@ -381,7 +411,15 @@ class ContinuousScheduler:
         long head (bucket > prefill_segment) claims a slot and stages
         instead; while a staging is already in flight the head's wait is
         bounded by its remaining segments, and the first short group
-        behind it keeps the pool fed."""
+        behind it keeps the pool fed.
+
+        With the prefix cache on, a short lead whose leading pages are
+        resident leads a *prefix plan* (seed the pages, prefill only the
+        suffixes) batched with queued requests sharing its bucket and
+        hit depth, and ordinary groups are formed from hit-free requests
+        only; a hit-carrying request that can't join just waits to lead,
+        which FIFO bounds the same way it bounds buckets.
+        """
         free = self._free_slots()
         if not free or not self._queue:
             return None
@@ -395,15 +433,21 @@ class ContinuousScheduler:
                       if not self._is_long(q)]
             if not shorts:
                 return None
-            head_bucket = self._bucket_of(len(shorts[0][1].tokens))
+            lead_rid, lead_req = shorts[0]
         else:
-            head_bucket = self._bucket_of(len(head_req.tokens))
+            lead_rid, lead_req = head_rid, head_req
+        if self.prefix is not None:
+            n_hit = self.prefix.lookup(lead_req.tokens)[1]
+            if n_hit:
+                return self._plan_prefix_group(lead_req, free, n_hit)
+        head_bucket = self._bucket_of(len(lead_req.tokens))
 
         G = self.sched.prefill_group
         take, keep = [], deque()
         for rid, req in self._queue:
             if (len(take) < min(len(free), G) and not self._is_long(req)
-                    and self._bucket_of(len(req.tokens)) == head_bucket):
+                    and self._bucket_of(len(req.tokens)) == head_bucket
+                    and not self._has_hit(req)):
                 take.append((rid, req))
             else:
                 keep.append((rid, req))
@@ -417,6 +461,7 @@ class ContinuousScheduler:
         eos = np.full((G,), -1, np.int32)
         max_new = np.ones((G,), np.int32)
         temps = np.zeros((G,), np.float32)
+        pkeys = []
         for g, ((rid, req), slot) in enumerate(zip(take, free)):
             T = len(req.tokens)
             tokens[g, :T] = np.asarray(req.tokens, np.int32)
@@ -426,51 +471,183 @@ class ContinuousScheduler:
             max_new[g] = req.max_new_tokens
             temps[g] = req.temperature
             self._slots.acquire(slot, rid)
+            if self.prefix is not None:
+                pkeys.append(self.prefix.lookup(req.tokens)[0])
         return {"bucket": head_bucket, "tokens": tokens, "lengths": lengths,
                 "slots": slots, "eos": eos, "max_new": max_new,
-                "temps": temps}
+                "temps": temps, "pkeys": pkeys}
 
-    def _plan_admissions(self) -> list[dict]:
-        """Every admission the queue and free slots allow, prepared but
-        not yet launched."""
-        groups = []
+    def _plan_prefix_group(self, lead_req, free: list[int],
+                           n_hit: int) -> Optional[dict]:
+        """Form one batched prefix-hit admission: up to prefill_group
+        short requests sharing the lead's bucket AND resident-page depth
+        (their seeded widths — and so the suffix-chunk program — match;
+        the pages themselves may differ per row).  Batching keeps a hit
+        wave as cheap per request as a group prefill: one chunked suffix
+        pass and one inject serve the whole wave."""
+        bucket = self._bucket_of(len(lead_req.tokens))
+        G = self.sched.prefill_group
+        take, keep = [], deque()
+        for rid, req in self._queue:
+            if (len(take) < min(len(free), G) and not self._is_long(req)
+                    and self._bucket_of(len(req.tokens)) == bucket):
+                keys, h = self.prefix.lookup(req.tokens)
+                if h == n_hit:
+                    take.append((rid, req, keys))
+                    continue
+            keep.append((rid, req))
+        assert take, "the hit lead must join its own prefix group"
+        self._queue = keep
+        for (rid, _, _), slot in zip(take, free):
+            self._slots.acquire(slot, rid)
+        return {"prefix": True, "take": take, "slots": free[:len(take)],
+                "bucket": bucket, "n_hit": n_hit}
+
+    def _admit(self) -> None:
+        """Plan and launch every admission the queue and free slots
+        allow.  Each plan launches as it forms: a group's pin() lands
+        its pages in the prefix index (host-side) before the next plan's
+        lookup runs, so same-round arrivals sharing a prefix hit on the
+        very first wave instead of waiting for the next round."""
         while True:
             g = self._plan_one()
             if g is None:
-                return groups
+                return
             if g is not True:
-                groups.append(g)
+                self._launch(g)
+
+    def _launch(self, g: dict) -> None:
+        """Dispatch one prepared admission plan."""
+        if g.get("prefix"):
+            self._launch_prefix(g)
+        else:
+            self._launch_group(g)
 
     def _launch_group(self, g: dict) -> None:
         """Dispatch one prepared group: per-bucket prefill + in-graph
-        inject.  Async — the host returns as soon as the work is queued."""
+        inject.  Async — the host returns as soon as the work is queued.
+        With the prefix cache on, every row's shareable pages are
+        registered (sliced from the prefill rows) and pinned for the
+        slot's lifetime."""
         logits0, rows, _ = self._prefill(
             self.params, jnp.asarray(g["tokens"]), jnp.asarray(g["lengths"]),
             max_len=self._copy_width(g["bucket"]))
+        if self.prefix is not None:
+            for i, (keys, slot) in enumerate(zip(g["pkeys"], g["slots"])):
+                self.prefix.record(len(keys), 0)
+                if keys:
+                    self.prefix.pin(int(slot), keys,
+                                    rows["k"][:, :, i], rows["v"][:, :, i])
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
             self._pool, jnp.asarray(g["slots"]), rows, logits0,
             jnp.asarray(g["lengths"]), jnp.asarray(g["eos"]),
             jnp.asarray(g["max_new"]), jnp.asarray(g["temps"]), sub)
 
+    def _launch_prefix(self, g: dict) -> None:
+        """Admit a wave of prefix-hit requests in one batch: seed each
+        row's resident pages into a fresh G-row cache (the copy-on-write
+        copies, hoisted to admission — the pool's dense layout makes
+        inject the slot's first and only write below the prompt), then
+        prefill just the suffixes in page-width chunks attending at the
+        full bucket width (the same segment-vs-one-shot bit-identity
+        `_advance_staging` relies on).  `prefill_chunk` gathers logits
+        per row, so rows whose prompts end in different chunks each keep
+        the logits of the chunk holding their final token; a short row's
+        later chunks only write pad keys above its prompt, exactly what
+        a full-width group prefill leaves there.  One inject lands the
+        whole wave through the ordinary page-granular scatter — the same
+        compiled program the group path uses.  Every device op is
+        dispatched async, so overlap mode pipelines a prefix wave behind
+        the in-flight decode chunk like any other."""
+        take, H = g["take"], g["n_hit"]
+        page = self.sched.page_size
+        G = self.sched.prefill_group
+        Wc = self._copy_width(g["bucket"])
+        seeded = H * page
+        kvs = [self.prefix.fetch(keys[:H]) for _, _, keys in take]
+        pad = G - len(take)
+        kk = jnp.stack([kv["k"] for kv in kvs]
+                       + [jnp.zeros_like(kvs[0]["k"])] * pad, axis=2)
+        vv = jnp.stack([kv["v"] for kv in kvs]
+                       + [jnp.zeros_like(kvs[0]["v"])] * pad, axis=2)
+        cache = dict(bb.init_cache(self.cfg, G, Wc))
+        cache["k"] = cache["k"].at[:, :, :, :seeded].set(
+            kk.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :, :seeded].set(
+            vv.astype(cache["v"].dtype))
+        toks = np.zeros((G, Wc), np.int32)
+        lengths = np.ones((G,), np.int32)        # dummies: 1 valid token
+        slots = np.full((G,), self.sched.max_slots, np.int32)
+        eos = np.full((G,), -1, np.int32)
+        max_new = np.ones((G,), np.int32)
+        temps = np.zeros((G,), np.float32)
+        for i, ((rid, req, _), slot) in enumerate(zip(take, g["slots"])):
+            T = len(req.tokens)
+            toks[i, :T] = np.asarray(req.tokens, np.int32)
+            lengths[i] = T
+            slots[i] = slot
+            eos[i] = req.eos_id
+            max_new[i] = req.max_new_tokens
+            temps[i] = req.temperature
+        logits0 = None
+        for d in range(seeded, Wc, page):     # seeded <= T-1 on hit rows
+            last = np.clip(lengths - 1 - d, 0, page - 1).astype(np.int32)
+            lg, cache = self._prefill_chunk(
+                self.params, jnp.asarray(toks[:, d:d + page]), cache,
+                jnp.int32(d), attend_width=g["bucket"],
+                last_index=jnp.asarray(last))
+            ends_here = (d <= lengths - 1) & (lengths - 1 < d + page)
+            logits0 = lg if logits0 is None else jnp.where(
+                jnp.asarray(ends_here)[:, None], lg, logits0)
+            if d + page >= int(lengths.max()):
+                break
+        for i, ((_, _, keys), slot) in enumerate(zip(take, g["slots"])):
+            self.prefix.record(len(keys), H)
+            self.prefix.pin(int(slot), keys, cache["k"][:, :, i],
+                            cache["v"][:, :, i])
+        self._key, sub = jax.random.split(self._key)
+        self._pool = self._inject(
+            self._pool, jnp.asarray(slots), cache, logits0,
+            jnp.asarray(lengths), jnp.asarray(eos),
+            jnp.asarray(max_new), jnp.asarray(temps), sub)
+
     # ------------------------------------------------- chunked prefill --
 
     def _start_staging(self, rid: int, req, slot: int) -> None:
         """Claim a slot for a long admission; its prompt prefills one
-        `prefill_segment`-token slice per scheduling round."""
+        `prefill_segment`-token slice per scheduling round.  Resident
+        prefix pages seed the staged cache in whole segments (staging
+        advances a segment at a time, so a partial segment can't be
+        skipped) and `depth` starts past them — a long re-admission of a
+        shared header pays only its tail's segments."""
         seg = self.sched.prefill_segment
+        page = self.sched.page_size
         bucket = self._bucket_of(len(req.tokens))
         T = len(req.tokens)
         n_segs = round_up(bucket, seg) // seg
         toks = np.zeros((n_segs * seg,), np.int32)
         toks[:T] = np.asarray(req.tokens, np.int32)
+        cache = bb.init_cache(self.cfg, 1, n_segs * seg)
+        depth, keys = 0, []
+        if self.prefix is not None:
+            keys, n_hit = self.prefix.lookup(req.tokens)
+            depth = (n_hit * page // seg) * seg    # whole segments only
+            self.prefix.record(len(keys), depth // page)
+            if depth:
+                kv = self.prefix.fetch(keys[:-(-depth // page)])
+                cache = dict(cache)
+                cache["k"] = cache["k"].at[:, :, :, :depth].set(
+                    kv["k"][:, :, None, :depth].astype(cache["k"].dtype))
+                cache["v"] = cache["v"].at[:, :, :, :depth].set(
+                    kv["v"][:, :, None, :depth].astype(cache["v"].dtype))
         self._slots.acquire(slot, rid)
         self._staging.append({
-            "rid": rid, "req": req, "slot": slot, "depth": 0, "T": T,
-            "bucket": bucket, "tokens": toks, "logits0": None,
+            "rid": rid, "req": req, "slot": slot, "depth": depth, "T": T,
+            "bucket": bucket, "tokens": toks, "logits0": None, "keys": keys,
             # staging cache width: whole segments covering the bucket, so
             # every segment's K/V write lands without clamping
-            "cache": bb.init_cache(self.cfg, 1, n_segs * seg),
+            "cache": cache,
         })
 
     def _advance_staging(self) -> None:
@@ -499,6 +676,9 @@ class ContinuousScheduler:
         """The staged cache joins the pool through the same page-granular
         inject as one-shot admissions (first token sampled in-graph)."""
         req = st["req"]
+        if self.prefix is not None and st["keys"]:
+            self.prefix.pin(st["slot"], st["keys"],
+                            st["cache"]["k"][:, :, 0], st["cache"]["v"][:, :, 0])
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
             self._pool, jnp.asarray([st["slot"]]), st["cache"],
@@ -523,6 +703,8 @@ class ContinuousScheduler:
         out = []
         for i in fin:
             rid = self._slots.release(i)
+            if self.prefix is not None:
+                self.prefix.release(i)     # unpin the slot's prefix pages
             self._deadlines.pop(rid, None)
             self._results[rid] = Completion(
                 buf[i, :gen[i]].astype(np.int32), int(gen[i]),
@@ -653,8 +835,7 @@ class ContinuousScheduler:
         if self.sched.overlap:
             return expired + self._step_overlapped()
         self._advance_staging()
-        for g in self._plan_admissions():
-            self._launch_group(g)
+        self._admit()
         if self._dispatch_chunk() is None:
             return expired
         return expired + self._drain()
@@ -672,11 +853,11 @@ class ContinuousScheduler:
         admission pass fills them, and completions simply report one
         round late."""
         self._advance_staging()                # prefill segment (async)
-        for g in self._plan_admissions():      # overlap chunk k-1: bucket/
-            self._launch_group(g)              # tokenize + inject dispatch
+        self._admit()                          # overlap chunk k-1: bucket/
+                                               # tokenize + inject dispatch
         out = self._drain_pending()            # round k-1 lands (no idle
-        for g in self._plan_admissions():      # wait); freed slots admit
-            self._launch_group(g)              # before this round's chunk
+        self._admit()                          # wait); freed slots admit
+                                               # before this round's chunk
         rids = list(self._slot_rid)            # occupancy at dispatch time
         active = self._dispatch_chunk()
         if active is not None:

@@ -154,6 +154,21 @@ def test_deadline_stops_retries_as_expired():
     assert d.arrive_s == d.device_free_s == pytest.approx(0.23)
 
 
+def test_attempt_overrunning_deadline_is_expired_not_delivered():
+    """Satellite: a single attempt whose serialization alone overruns
+    deadline_s is a deadline miss — the payload would land late, so the
+    transmit reports expired, not a clean delivery.  A deadline the
+    attempt beats leaves the closed forms bit-exact."""
+    cfg = ChannelConfig(bandwidth_bps=1e6, propagation_s=0.0)
+    late = Channel(cfg, seed=0).transmit(125000, 0.0, deadline_s=0.5)
+    assert not late.delivered and late.expired      # ser = 1.0 s > 0.5 s
+    assert late.attempts == 1
+    assert late.arrive_s == late.device_free_s == pytest.approx(1.0)
+    ok = Channel(cfg, seed=0).transmit(125000, 0.0, deadline_s=1.5)
+    assert ok.delivered and not ok.expired
+    assert ok.device_free_s == pytest.approx(1.0)
+
+
 def test_retry_forever_terminates_under_total_loss():
     """Satellite: max_attempts=0 ("app retries forever") + a 100%-loss
     link must terminate as a failed delivery at the safety cap, never

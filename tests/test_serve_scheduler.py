@@ -370,6 +370,66 @@ def test_deadline_churn_preserves_slot_invariants(system):
     assert not sched._staging and sched._pending is None
 
 
+def test_long_prompts_bucket_at_page_granularity(system):
+    """Satellite (compile-cache bound): prompts above every configured
+    bucket round up to the next page_size multiple instead of bucketing
+    at their raw length — distinct long lengths share one prefill
+    compilation, and tokens still match the per-request reference."""
+    cfg, params = system
+    eng = _engine(cfg, params)
+    sched = ContinuousScheduler(
+        cfg, params, max_len=64,
+        sched=SchedulerConfig(buckets=(8, 16), max_slots=4,
+                              prefill_group=2, chunk=4, page_size=16,
+                              prefill_segment=0))   # group path only
+    assert sched._bucket_of(33) == 48
+    assert sched._bucket_of(41) == 48
+    assert sched._bucket_of(63) == 64               # capped at max_len
+    rng = np.random.RandomState(14)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab, L), max_new_tokens=4)
+            for L in (33, 37, 41, 45)]
+    rids = [sched.submit(r) for r in reqs]
+    outs = sched.run()
+    assert sched._prefill._cache_size() == 1, \
+        "four long lengths in one page bucket must share one compilation"
+    for req, rid in zip(reqs, rids):
+        np.testing.assert_array_equal(outs[rid].tokens,
+                                      _reference(eng, req))
+
+
+def test_stale_snapshot_skips_readmitted_slot(system):
+    """Satellite: under overlap, a slot deadline-evicted between a
+    chunk's dispatch and its `_drain_pending`, then re-admitted, must
+    not be completed from the stale snapshot (`p["rids"][i] == rid`):
+    the new occupant decodes its own full reference and no slot leaks."""
+    cfg, params = system
+    eng = _engine(cfg, params)
+    rng = np.random.RandomState(15)
+    pa = rng.randint(0, cfg.vocab, 8)
+    pb = rng.randint(0, cfg.vocab, 8)
+    ref_a = _reference(eng, Request(tokens=pa, max_new_tokens=40))
+    ref_b = _reference(eng, Request(tokens=pb, max_new_tokens=4))
+
+    sched = _fault_sched(cfg, params, overlap=True, max_slots=1,
+                         clock=_Clock(0.005))
+    ra = sched.submit(Request(tokens=pa, max_new_tokens=40,
+                              deadline_s=0.06))
+    rb = sched.submit(Request(tokens=pb, max_new_tokens=4))
+    outs = sched.run()
+    assert sorted(outs) == sorted([ra, rb])   # each resolved exactly once
+    # the evictee kept its own partial decode (a prefix of its reference)
+    assert outs[ra].timed_out and 0 < len(outs[ra].tokens) < 40
+    np.testing.assert_array_equal(outs[ra].tokens,
+                                  ref_a[:len(outs[ra].tokens)])
+    # the slot's new occupant was admitted while ra's snapshot was still
+    # pending; that snapshot must not have completed it early or with the
+    # evictee's buffer
+    assert not outs[rb].timed_out
+    np.testing.assert_array_equal(outs[rb].tokens, ref_b)
+    assert not sched._slots.any_occupied() and sched._pending is None
+    assert not sched._deadlines and not sched._staging
+
+
 def test_engine_routes_deadlines_through_scheduler(system):
     """Equal-length requests carrying deadlines leave the fast path (it
     cannot evict) and still produce the fast path's tokens when the

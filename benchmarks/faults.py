@@ -13,11 +13,20 @@ over WiFi / narrowband / lossy-WiFi links, 6 inferences each, pool width
     a Local-NN fallback (nothing hangs) and the accuracy proxy is the
     local path's accuracy alone.
 
+A third pinned run — the *stampede* — is the overload scenario: a 10x
+`ArrivalBurst` compresses every client's arrivals into the head of the
+run while a `LinkDegrade` throttles the links, against a gateway with a
+bounded admission queue.  It asserts the overload contract: every
+request resolves to exactly one degradation-ladder rung (served /
+degraded / shed / rejected / fallback — nothing hangs, nothing buffers
+unboundedly) and pins the rejected-rung rates.
+
 Every row is a *deterministic* output of the seeded simulation (fault
-randomness lives in the injector's per-client streams), so the
-``--compare`` gate matches them at ratio ~1.0 on any machine and only
-moves when the failure semantics change.  The workload is pinned (no
---smoke shrink) so smoke rows stay comparable to the committed baseline.
+randomness lives in the injector's per-client streams; the stampede's
+arrival compression is closed-form), so the ``--compare`` gate matches
+them at ratio ~1.0 on any machine and only moves when the failure
+semantics change.  The workload is pinned (no --smoke shrink) so smoke
+rows stay comparable to the committed baseline.
 """
 from __future__ import annotations
 
@@ -28,7 +37,8 @@ def faults_rows() -> list[tuple]:
     from repro.configs.agilenn_cifar import gateway_demo_config
     from repro.core.agile import init_agile_params
     from repro.serve.faults import (
-        Blackout, BurstLoss, FaultInjector, GatewayStall, PayloadCorruption,
+        ArrivalBurst, Blackout, BurstLoss, FaultInjector, GatewayStall,
+        LinkDegrade, PayloadCorruption,
     )
     from repro.serve.gateway import (
         Fleet, GatewayConfig, OffloadGateway, mixed_fleet)
@@ -38,7 +48,7 @@ def faults_rows() -> list[tuple]:
     gw = GatewayConfig(batch_width=8)
     pin = "16 clients x6 reqs W=8 deadline=150ms"
 
-    def run(schedule) -> "object":
+    def run(schedule, gw=gw) -> "object":
         specs = mixed_fleet(16, n_requests=6, deadline_ms=150.0)
         fleet = Fleet(cfg, params, specs, seed=0)
         inj = FaultInjector(schedule, seed=7)
@@ -61,7 +71,22 @@ def faults_rows() -> list[tuple]:
     assert blackout.fallback_rate == 1.0, \
         "total blackout must resolve every request as a Local-NN fallback"
 
+    # stampede: 10x arrival compression + throttled links against a
+    # bounded admission queue — the overload-contract pin
+    stampede = run(
+        (ArrivalBurst(factor=10.0),
+         LinkDegrade(bandwidth_scale=0.5, extra_loss=0.1)),
+        gw=GatewayConfig(batch_width=8, max_queue=4))
+    assert len(stampede.traces) == fleet_reqs, \
+        "stampede left requests unresolved — admission or queue hung"
+    ladder = {"served", "degraded", "shed", "rejected", "fallback"}
+    bad = {tr.status for tr in stampede.traces} - ladder
+    assert not bad, f"stampede produced off-ladder statuses {bad}"
+    assert stampede.rejected_rate > 0.0, \
+        "a 10x stampede into a 4-deep queue must reject at admission"
+
     sched = "blackout+burst+corrupt+gwstall"
+    stam = "stampede(10x)+degrade maxq=4"
     return [
         ("faults.fallback_rate", chaos.fallback_rate,
          f"{pin} {sched}, simulated"),
@@ -73,4 +98,10 @@ def faults_rows() -> list[tuple]:
          f"{pin} {sched}, simulated"),
         ("faults.blackout_accuracy_proxy", blackout.summary()["accuracy"],
          f"{pin} total blackout, simulated"),
+        ("faults.stampede_rejected_rate", stampede.rejected_rate,
+         f"{pin} {stam}, simulated"),
+        ("faults.stampede_served_rate", stampede.status_rate("served"),
+         f"{pin} {stam}, simulated"),
+        ("faults.stampede_e2e_p99_ms", stampede.latency_percentile_ms(99),
+         f"{pin} {stam}, simulated"),
     ]

@@ -23,12 +23,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
                          "kernels, serve, serve_sharded, gateway, faults, "
-                         "prefix, roofline)")
+                         "prefix, stream, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: cheap suites only (kernels, serve, "
-                         "gateway, faults) with shrunk workloads")
+                         "gateway, faults, prefix, stream) with shrunk "
+                         "workloads")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="regression gate: compare collected rows against a "
                          "JSON baseline and exit 2 if any matching row "
@@ -50,6 +51,7 @@ def main(argv=None) -> None:
     from benchmarks.roofline_table import roofline_rows
     from benchmarks.serve_sharded import serve_sharded_rows
     from benchmarks.serve_steady import serve_steady_rows
+    from benchmarks.stream_slo import stream_slo_rows
 
     suites = dict(ALL_FIGURES)
     suites.update(ABLATIONS)
@@ -59,6 +61,7 @@ def main(argv=None) -> None:
     suites["gateway"] = gateway_rows
     suites["faults"] = faults_rows
     suites["prefix"] = prefix_cache_rows
+    suites["stream"] = stream_slo_rows
     suites["roofline"] = roofline_rows
 
     if args.only:
@@ -67,7 +70,8 @@ def main(argv=None) -> None:
         # serve_sharded is not in the default smoke set: its rows pin the
         # device topology, and only the multi-device CI job (forced
         # 8-device mesh, --only serve_sharded) has baseline rows to match
-        selected = ["kernels", "serve", "gateway", "faults", "prefix"]
+        selected = ["kernels", "serve", "gateway", "faults", "prefix",
+                    "stream"]
     else:
         selected = list(suites)
     print("name,value,derived")

@@ -1,0 +1,85 @@
+"""Streaming SLO benchmark: the overload-robust frontend under a 10x
+client stampede, on a virtual clock.
+
+A closed-loop fleet (four clients per priority class, staggered session
+starts) is compressed 10x by a scripted `ArrivalBurst` and driven
+through a `StreamingFrontend` with a bounded admission queue and an SLO
+budget.  Every round of the real scheduler (real compiled programs,
+greedy seeded tokens) costs a fixed ``ROUND_S`` of simulated time — the
+same modeling move the gateway makes with its device/link models — so
+TTFT, inter-token latency, rejection rate and goodput are exact,
+machine-independent outputs of the simulation.  The rows' derived
+strings therefore end in "simulated": `benchmarks.run.compare_rows`
+gates them symmetrically on raw ratio, and any drift is a semantic
+change to admission control, not noise.
+
+The workload is pinned (no --smoke shrink) so smoke rows stay
+comparable to the committed baseline.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+KEY = jax.random.PRNGKey(0)
+
+ROUND_S = 0.01          # modeled service time of one scheduler round
+N_PER_CLASS = 4         # clients per priority class
+N_REQS = 4              # requests per client session
+BURST = 10.0            # arrival-compression factor
+
+
+def stream_slo_rows() -> list[tuple]:
+    from repro.configs import get_config
+    from repro.models import backbone as bb
+    from repro.serve.engine import Request
+    from repro.serve.faults import ArrivalBurst, FaultInjector
+    from repro.serve.frontend import (
+        FrontendConfig, Priority, SimClient, StreamingFrontend,
+        VirtualClock, drive_closed_loop)
+    from repro.serve.scheduler import SchedulerConfig
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = bb.init_params(cfg, KEY)
+    rng = np.random.RandomState(0)
+    clients = []
+    for c in range(3 * N_PER_CLASS):
+        prio = Priority(c % 3)
+        reqs = tuple(
+            Request(tokens=rng.randint(0, cfg.vocab,
+                                       int(rng.choice((4, 8, 12)))),
+                    max_new_tokens=int(6 + rng.randint(0, 5)))
+            for _ in range(N_REQS))
+        # nominal session starts spread over 1.2 s; the stampede
+        # compresses them 10x into the first 120 ms
+        clients.append(SimClient(requests=reqs, priority=prio,
+                                 start_s=0.1 * c, think_s=0.02))
+    clock = VirtualClock()
+    fe = StreamingFrontend(
+        cfg, params,
+        frontend=FrontendConfig(max_queue=6, slo_ms=250.0,
+                                class_deadline_ms=(400.0, None, None)),
+        sched=SchedulerConfig(buckets=(8, 16), max_slots=4,
+                              prefill_group=2, chunk=2),
+        max_len=32, seed=0, clock=clock)
+    faults = FaultInjector((ArrivalBurst(factor=BURST),), seed=7)
+    rep = drive_closed_loop(fe, clients, clock=clock, round_s=ROUND_S,
+                            faults=faults)
+    assert all(r.status in ("served", "shed", "rejected")
+               for r in rep.records), "a request left the ladder"
+    inter = rep.ttft_ms(Priority.INTERACTIVE)
+    itl = rep.itl_ms()
+    pin = (f"{3 * N_PER_CLASS} clients x{N_REQS} reqs stampede(10x) "
+           f"maxq=6 slo=250ms round={ROUND_S * 1e3:g}ms")
+    return [
+        ("stream.ttft_p50_ms", float(np.percentile(inter, 50)),
+         f"{pin} interactive, simulated"),
+        ("stream.ttft_p99_ms", float(np.percentile(inter, 99)),
+         f"{pin} interactive, simulated"),
+        ("stream.itl_p99_ms", float(np.percentile(itl, 99)),
+         f"{pin} all classes, simulated"),
+        ("stream.reject_rate", rep.reject_rate,
+         f"{pin} all classes, simulated"),
+        ("stream.goodput_rps", rep.goodput_rps,
+         f"{pin} all classes, simulated"),
+    ]

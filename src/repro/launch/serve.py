@@ -13,6 +13,15 @@ or a multi-client offload-gateway fleet run.
       --faults "blackout:0.05:0.2;burst;corrupt:0:1:0.3" --fault-seed 7
                                    # chaos run: scripted faults, bounded
                                    # retries, graceful Local-NN fallback
+  python -m repro.launch.serve --arch qwen2-0.5b --local --queue 24 \
+      --stream --max-queue 8 --priority mixed --slo-ms 500
+                                   # streaming frontend: bounded admission,
+                                   # priority classes, typed rejections
+
+Flags are scope-checked at parse time: a flag that only applies to one
+mode (e.g. --prefix-cache without --queue, or --slo-ms without
+--gateway or --stream) is an immediate argparse error, not a silent
+no-op.
 """
 from __future__ import annotations
 
@@ -74,6 +83,55 @@ def _serve_queue(cfg, params, args) -> int:
     return 0
 
 
+def _serve_stream(cfg, params, args) -> int:
+    """Mixed-length queue through the overload-robust streaming frontend
+    (bounded admission, priority classes, typed rejections)."""
+    import numpy as np
+    from repro.serve.engine import Request
+    from repro.serve.frontend import (
+        FrontendConfig, Overloaded, Priority, StreamingFrontend)
+    from repro.serve.scheduler import SchedulerConfig
+
+    lengths = tuple(int(x) for x in args.lengths.split(","))
+    rng = np.random.RandomState(0)
+    prios = (list(Priority) if args.priority == "mixed"
+             else [Priority.parse(args.priority)])
+    fe = StreamingFrontend(
+        cfg, params,
+        frontend=FrontendConfig(max_queue=args.max_queue,
+                                slo_ms=args.slo_ms),
+        sched=SchedulerConfig(buckets=lengths,
+                              overlap=not args.serialized),
+        max_len=max(lengths) + args.tokens + 8)
+    born = {}
+    n_rej = 0
+    t0 = time.time()
+    for i in range(args.queue):
+        req = Request(tokens=rng.randint(0, cfg.vocab, rng.choice(lengths)),
+                      max_new_tokens=args.tokens)
+        try:
+            rid = fe.submit(req, prios[i % len(prios)])
+            born[rid] = time.monotonic()
+        except Overloaded as e:
+            n_rej += 1
+            print(f"  request {i}: {e}")
+    results = fe.run()
+    dt = time.time() - t0
+    from repro.serve.frontend import FirstToken
+    ttft = sorted((ev.t - born[ev.rid]) * 1e3 for ev in fe.events
+                  if isinstance(ev, FirstToken))
+    n_tok = sum(len(toks) for _, toks in results.values())
+    by = {s: sum(st == s for st, _ in results.values())
+          for s in ("served", "shed")}
+    print(f"stream: {args.queue} requests (classes "
+          f"{'/'.join(p.name.lower() for p in prios)}, "
+          f"max_queue {args.max_queue}) -> "
+          f"{by['served']} served, {by['shed']} shed, {n_rej} rejected; "
+          f"{n_tok} tokens in {dt:.2f}s -> {n_tok / dt:.1f} tok/s"
+          + (f"; ttft p50 {ttft[len(ttft) // 2]:.1f} ms" if ttft else ""))
+    return 0
+
+
 def _serve_gateway(args) -> int:
     """Drive a simulated weak-device fleet through the offload gateway."""
     import jax
@@ -102,6 +160,45 @@ def _serve_gateway(args) -> int:
     for k, v in report.summary().items():
         print(f"  {k}: {v}")
     return 0
+
+
+# every mode-scoped flag: (flag, argparse dest, mode that enables it).
+# checked against the parser defaults at parse time so that a flag which
+# cannot take effect fails fast instead of being silently ignored
+_SCOPED_FLAGS = (
+    ("--lengths", "lengths", "queue"),
+    ("--mesh", "mesh", "queue"),
+    ("--serialized", "serialized", "queue"),
+    ("--prefix-cache", "prefix_cache", "queue"),
+    ("--kv-tier-mb", "kv_tier_mb", "queue"),
+    ("--stream", "stream", "queue"),
+    ("--priority", "priority", "stream"),
+    ("--max-queue", "max_queue", "stream"),
+    ("--requests", "requests", "gateway"),
+    ("--batch-width", "batch_width", "gateway"),
+    ("--deadline-ms", "deadline_ms", "gateway"),
+    ("--faults", "faults", "gateway"),
+    ("--fault-seed", "fault_seed", "gateway"),
+)
+
+
+def _validate_flags(ap, args) -> None:
+    """Parse-time scope check: reject flag combinations that would be
+    silently inapplicable (each scoped flag must ride with the mode flag
+    that reads it).  --slo-ms is dual-scope: gateway rate control or the
+    streaming frontend's admission budget."""
+    if args.gateway and args.queue:
+        ap.error("--gateway and --queue are separate modes; pick one")
+    on = {"queue": bool(args.queue), "gateway": bool(args.gateway),
+          "stream": bool(args.queue and args.stream)}
+    for flag, dest, scope in _SCOPED_FLAGS:
+        if getattr(args, dest) != ap.get_default(dest) and not on[scope]:
+            need = {"queue": "--queue N", "gateway": "--gateway N",
+                    "stream": "--stream (with --queue N)"}[scope]
+            ap.error(f"{flag} only applies with {need}")
+    if args.slo_ms is not None and not (on["gateway"] or on["stream"]):
+        ap.error("--slo-ms only applies with --gateway N or with "
+                 "--queue N --stream")
 
 
 def main(argv=None) -> int:
@@ -134,14 +231,28 @@ def main(argv=None) -> int:
                          "demoted off the device, compressed with the "
                          "quantize+bit-pack payload codec (0: demoted "
                          "pages are dropped)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve --queue through the overload-robust "
+                         "streaming frontend (typed per-token events, "
+                         "bounded admission, priority shedding)")
+    ap.add_argument("--priority", default="interactive",
+                    choices=["interactive", "batch", "best-effort",
+                             "mixed"],
+                    help="admission class for --stream requests "
+                         "('mixed' cycles all three)")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bound on admitted-but-unscheduled requests for "
+                         "--stream; past it submissions are rejected "
+                         "with a retry-after hint (default: unbounded)")
     ap.add_argument("--gateway", type=int, default=0, metavar="N",
                     help="simulate N weak-device clients through the "
                          "multi-client offload gateway")
     ap.add_argument("--requests", type=int, default=4,
                     help="inferences per gateway client")
     ap.add_argument("--slo-ms", type=float, default=None,
-                    help="per-client latency SLO enabling adaptive rate "
-                         "control (default: static configuration)")
+                    help="latency SLO: with --gateway, enables adaptive "
+                         "rate control; with --stream, the queueing-"
+                         "delay budget past which admission rejects")
     ap.add_argument("--batch-width", type=int, default=8,
                     help="gateway Remote-NN feature slot pool width")
     ap.add_argument("--faults", default=None, metavar="SPEC",
@@ -151,7 +262,8 @@ def main(argv=None) -> int:
                          "burst[:t0:t1[:pgb:pbg]] (Gilbert-Elliott burst "
                          "loss), degrade[:t0:t1[:scale[:loss]]], "
                          "devstall[:t0:t1[:s]], gwstall[:t0:t1[:s]], "
-                         "corrupt[:t0:t1[:p]]; e.g. "
+                         "corrupt[:t0:t1[:p]], stampede[:t0:t1[:f]] "
+                         "(client arrivals compressed f-fold); e.g. "
                          "'blackout:0.05:0.2;burst;corrupt:0:1:0.3'")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the fault schedule's RNG streams "
@@ -162,6 +274,7 @@ def main(argv=None) -> int:
                          "shed at admission, and the device degrades to "
                          "its Local-NN logits (default: no deadline)")
     args = ap.parse_args(argv)
+    _validate_flags(ap, args)
 
     if args.gateway:
         return _serve_gateway(args)
@@ -186,6 +299,8 @@ def main(argv=None) -> int:
     params = bb.init_params(cfg, key)
 
     if args.queue:
+        if args.stream:
+            return _serve_stream(cfg, params, args)
         return _serve_queue(cfg, params, args)
 
     B, T = 2, 16

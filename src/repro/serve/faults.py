@@ -21,6 +21,12 @@ those as *deterministic, seeded schedules* so chaos runs replay exactly:
   * ``PayloadCorruption`` — delivered payloads have their LZW code
     stream flipped or truncated; the gateway's hardened decode turns
     this into a typed erasure instead of a crash.
+  * ``ArrivalBurst``      — a client stampede: arrivals nominally spread
+    over a window land compressed toward its start, multiplying offered
+    load by ``factor`` without changing total demand.  Consumed by the
+    gateway's arrival events and by the streaming frontend's simulated
+    driver, so overload is scriptable and replayable like every other
+    fault.
 
 `FaultInjector` owns all fault randomness (per-client RNGs seeded from
 one root seed), so the channels' own RNG streams — and therefore every
@@ -149,6 +155,26 @@ class PayloadCorruption:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalBurst:
+    """Client stampede: an arrival nominally at ``t`` in [t0, t1) lands
+    at ``t0 + (t - t0) / factor`` instead — the window's arrivals
+    compress into its first ``1/factor``-th, so offered load inside the
+    burst multiplies by ``factor`` while total demand is unchanged.
+    Deterministic (no RNG): the same schedule maps the same arrival
+    times on every run, which is what lets the overload benches pin
+    reject/shed rates as exact rows."""
+    t0: float = 0.0
+    t1: float = math.inf
+    factor: float = 10.0
+    clients: "tuple[int, ...] | None" = None
+
+    def __post_init__(self):
+        _window_ok(self.t0, self.t1, "ArrivalBurst")
+        _check(self.factor >= 1.0,
+               f"ArrivalBurst.factor must be >= 1, got {self.factor}")
+
+
+@dataclasses.dataclass(frozen=True)
 class SlotPoolStall:
     """Decode-scheduler fault: scheduling rounds in [r0, r1) dispatch no
     decode chunk (the executor is stalled); deadlines keep aging, so
@@ -162,7 +188,7 @@ class SlotPoolStall:
 
 
 FaultEvent = (Blackout, BurstLoss, LinkDegrade, DeviceStall, GatewayStall,
-              PayloadCorruption, SlotPoolStall)
+              PayloadCorruption, ArrivalBurst, SlotPoolStall)
 
 
 def _applies(ev, client: int) -> bool:
@@ -253,6 +279,8 @@ class FaultInjector:
                                  if isinstance(e, PayloadCorruption))
         self.pool_stalls = tuple(e for e in events
                                  if isinstance(e, SlotPoolStall))
+        self.arrival_bursts = tuple(e for e in events
+                                    if isinstance(e, ArrivalBurst))
         self._rngs: dict[int, np.random.RandomState] = {}
         self._chains: dict[int, list] = {}
         self._views: dict[int, LinkFaultView] = {}
@@ -290,6 +318,17 @@ class FaultInjector:
     def chunk_stalled(self, round_idx: int) -> bool:
         return any(ev.r0 <= round_idx < ev.r1 for ev in self.pool_stalls)
 
+    # --------------------------------------------------------- arrivals --
+    def arrival_time(self, client: int, t: float) -> float:
+        """Map one nominal arrival time through the stampede schedule:
+        arrivals inside an `ArrivalBurst` window compress toward its
+        start by the burst factor; everything else passes through
+        unchanged (so an empty schedule is exactly the identity)."""
+        for ev in self.arrival_bursts:
+            if _applies(ev, client) and ev.t0 <= t < ev.t1:
+                return ev.t0 + (t - ev.t0) / ev.factor
+        return t
+
     # ------------------------------------------------------- corruption --
     def corrupt(self, client: int, t: float, codes: list) -> "list | None":
         """A corrupted copy of a payload's LZW code stream, or None when
@@ -326,6 +365,9 @@ def parse_faults(spec: str) -> tuple:
       devstall[:t0:t1[:s]]     extra device compute seconds
       gwstall[:t0:t1[:s]]      extra gateway service seconds
       corrupt[:t0:t1[:p]]      payload corruption probability
+      stampede[:t0:t1[:f]]     client stampede: the window's arrivals
+                               compress toward t0 by factor f (offered
+                               load x f inside the burst)
 
     e.g. --faults "blackout:0.05:0.2;burst;corrupt:0:1:0.3"
     """
@@ -357,6 +399,9 @@ def parse_faults(spec: str) -> tuple:
         elif kind == "corrupt":
             extra = {"prob": f[2]} if len(f) >= 3 else {}
             out.append(PayloadCorruption(**window, **extra))
+        elif kind == "stampede":
+            extra = {"factor": f[2]} if len(f) >= 3 else {}
+            out.append(ArrivalBurst(**window, **extra))
         else:
             raise ValueError(f"unknown fault kind {kind!r} in --faults spec")
     return tuple(out)

@@ -6,9 +6,12 @@ over lossy rate-limited links (`Channel`) into a gateway that batches
 arrivals into fixed-width Remote-NN inference calls and returns combined
 logits with per-request end-to-end latency and device-energy accounting.
 
-Time is discrete-event simulated (a (time, prio, seq) heap; prio breaks
-same-instant ties toward the earliest deadline and seq keeps the rest
-FIFO, so runs are deterministic), while the Remote-NN logits are
+Time is discrete-event simulated on the serving stack's shared
+`repro.serve.event_loop.EventLoop` (a (time, prio, seq) heap; prio
+breaks same-instant ties toward the earliest deadline and seq keeps the
+rest FIFO, so runs are deterministic — the same loop class drives the
+streaming frontend's overload benches, so gateway arrivals and decode
+rounds share one clock discipline), while the Remote-NN logits are
 *actually computed*: arriving payloads are LZW-decoded, batch-bit-
 unpacked, dequantized and run through a jit'd `remote_forward` over a
 fixed-width feature slot pool — the continuous scheduler's admit/evict
@@ -29,6 +32,12 @@ responds instead of hanging, stepping down a degradation ladder —
   * shed      — the payload arrived, but its deadline passed before (or
     lapses at) batch admission: the gateway drops it and the device uses
     its Local-NN logits;
+  * rejected  — the payload arrived but the gateway's admission queue
+    was already at ``GatewayConfig.max_queue``: overload is refused at
+    the door instead of buffered without bound, and the device falls
+    back to its Local-NN logits immediately (with an unbounded queue —
+    the default — this rung never fires and every run is bit-identical
+    to the pre-admission-control gateway);
   * fallback  — the radio gave up (retry budget or deadline exhausted on
     a dark link): the device serves its own Local-NN logits, bit-
     identical to the standalone local path, the moment it stops retrying.
@@ -44,8 +53,6 @@ against the measured latency.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 import math
 import time
 from functools import partial
@@ -59,6 +66,7 @@ from repro.compress.lzw import (
 from repro.configs.agilenn_cifar import AgileNNConfig
 from repro.core.agile import remote_forward_jit
 from repro.serve.device_model import DeviceModel
+from repro.serve.event_loop import EventLoop
 from repro.serve.gateway.fleet import DeviceClient, Fleet, Payload
 from repro.serve.scheduler import SlotPool
 
@@ -68,6 +76,13 @@ class GatewayConfig:
     batch_width: int = 8        # Remote-NN feature slot pool width
     batch_window_s: float = 2e-3  # idle gateway waits this long after an
                                   # arrival for the pool to fill
+    max_queue: "int | None" = None  # admission-queue bound: an arrival
+                                    # finding this many payloads already
+                                    # queued is *rejected* (typed ladder
+                                    # rung above shed) and the device
+                                    # falls back to Local-NN immediately.
+                                    # None (default) = unbounded, bit-
+                                    # identical to the pre-bound gateway
 
     def __post_init__(self):
         if self.batch_width < 1:
@@ -76,6 +91,9 @@ class GatewayConfig:
         if self.batch_window_s < 0:
             raise ValueError(f"GatewayConfig.batch_window_s must be >= 0 "
                              f"(got {self.batch_window_s!r})")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"GatewayConfig.max_queue must be >= 1 or "
+                             f"None (got {self.max_queue!r})")
 
 
 @dataclasses.dataclass
@@ -97,7 +115,8 @@ class RequestTrace:
     logits: np.ndarray
     pred: int
     label: int
-    status: str = "served"     # served | degraded | shed | fallback
+    status: str = "served"     # served | degraded | shed | rejected |
+                               # fallback
     deadline_missed: bool = False
 
 
@@ -140,6 +159,12 @@ class GatewayReport:
         return self.status_rate("degraded")
 
     @property
+    def rejected_rate(self) -> float:
+        """Fraction refused at the gateway's admission bound (the
+        overload rung: the queue was full when the payload landed)."""
+        return self.status_rate("rejected")
+
+    @property
     def deadline_miss_rate(self) -> float:
         return float(np.mean([t.deadline_missed for t in self.traces]))
 
@@ -163,6 +188,7 @@ class GatewayReport:
                 [t.pred == t.label for t in self.traces])),
             "fallback_rate": self.fallback_rate,
             "degraded_rate": self.degraded_rate,
+            "rejected_rate": self.rejected_rate,
             "deadline_miss_rate": self.deadline_miss_rate,
             "sim_s": self.sim_s,
             "p50_ms_by_channel": {k: float(np.percentile(v, 50))
@@ -244,19 +270,23 @@ class OffloadGateway:
         return np.asarray(out)
 
     # -------------------------------------------------------- event loop --
-    def run(self) -> GatewayReport:
+    def run(self, loop: "EventLoop | None" = None) -> GatewayReport:
         fleet, gw, faults = self.fleet, self.gw, self.faults
         t_wall = time.perf_counter()
-        seq = itertools.count()
-        heap: list[tuple] = []
+        loop = loop if loop is not None else EventLoop()
+        push = loop.push
 
-        def push(t: float, kind: str, data, prio: float = 0.0) -> None:
-            heapq.heappush(heap, (t, prio, next(seq), kind, data))
+        def born_at(client: int, j: int) -> float:
+            """Request j's arrival instant, mapped through any scripted
+            `ArrivalBurst` stampede (identity with no faults)."""
+            t = float(fleet.clients[client].born[j])
+            return faults.arrival_time(client, t) if faults is not None \
+                else t
 
         next_req = [0] * len(fleet.clients)
         for c in fleet.clients:
             if c.spec.n_requests:
-                push(c.born[0], "dev", c.index)
+                push(born_at(c.index, 0), "dev", c.index)
 
         queue: list[_InFlight] = []
         busy = [False]
@@ -317,17 +347,18 @@ class OffloadGateway:
             busy[0] = True
             push(t0 + service, "serve", (take, logits))
 
-        while heap:
-            t, _, _, kind, data = heapq.heappop(heap)
+        while loop:
+            t, kind, data = loop.pop()
             if kind == "dev":
                 c = fleet.clients[data]
                 j = next_req[data]
+                born = born_at(data, j)
                 payload = fleet.make_payload(c, j)   # profile at send time
                 t_compute = fleet.compute_time(c)
                 if faults is not None:
                     t_compute += faults.device_stall_extra(data, t)
                 t_sent = t + t_compute
-                deadline = (c.born[j] + c.spec.deadline_ms * 1e-3
+                deadline = (born + c.spec.deadline_ms * 1e-3
                             if c.spec.deadline_ms is not None else math.inf)
                 d = c.channel.transmit(
                     payload.nbytes, t_sent,
@@ -336,7 +367,7 @@ class OffloadGateway:
                 energy = (c.device.p_cpu_w * t_compute
                           + c.device.p_tx_w * d.airtime_s)
                 item = _InFlight(
-                    payload=payload, client=c, t_born=c.born[j], t_start=t,
+                    payload=payload, client=c, t_born=born, t_start=t,
                     t_sent=t_sent, t_arrive=d.arrive_s,
                     attempts=d.attempts, energy_j=energy, deadline=deadline)
                 if faults is not None and d.delivered:
@@ -354,11 +385,19 @@ class OffloadGateway:
                                   d.expired)
                 next_req[data] = j + 1
                 if j + 1 < c.spec.n_requests:
-                    push(max(d.device_free_s, c.born[j + 1]), "dev", data)
+                    push(max(d.device_free_s, born_at(data, j + 1)),
+                         "dev", data)
             elif kind == "recv":
                 if data.deadline <= t:       # landed past its deadline:
                     resolve_local(data, data.deadline, "shed", True)
                     continue                 # the device already gave up
+                if gw.max_queue is not None and len(queue) >= gw.max_queue:
+                    # admission bound: overload is refused at the door —
+                    # the device hears "rejected" now and serves its own
+                    # Local-NN logits instead of parking in an unbounded
+                    # backlog whose deadline it would miss anyway
+                    resolve_local(data, t, "rejected", False)
+                    continue
                 queue.append(data)
                 if not busy[0]:
                     if len(queue) >= gw.batch_width:
@@ -397,7 +436,7 @@ class OffloadGateway:
                     deadline_missed=t > item.deadline))
                 t_end = max(t_end, t)
 
-        t_begin = min(float(c.born[0]) for c in fleet.clients
+        t_begin = min(born_at(c.index, 0) for c in fleet.clients
                       if c.spec.n_requests)
         return GatewayReport(traces=traces,
                              wall_s=time.perf_counter() - t_wall,

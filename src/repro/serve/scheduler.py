@@ -244,6 +244,13 @@ class ContinuousScheduler:
         self._results: dict[int, object] = {}
         self._next_rid = 0
         self._pending: Optional[dict] = None   # in-flight chunk snapshot
+        # streaming hook (serve.frontend): called between rounds with
+        # (rid, tokens_so_far) for every live pooled request — overlap
+        # rounds publish from the drained chunk's snapshot, serialized
+        # rounds from the pool, so tokens stream as each chunk lands.
+        # None (the default) skips the per-round buf/gen host copies
+        # entirely: a non-streaming run does no extra device->host work
+        self.stream_cb: Optional[object] = None
         self.prefix = None
         if self.sched.prefix_cache:
             from repro.serve.prefix_cache import PrefixCache
@@ -351,7 +358,11 @@ class ContinuousScheduler:
         # prefill per distinct long-prompt length
         return min(round_up(prompt_len, self.sched.page_size), self.max_len)
 
-    def submit(self, request) -> int:
+    def submit(self, request, *, deadline_at=None) -> int:
+        """deadline_at: absolute deadline on this scheduler's clock()
+        timeline, overriding request.deadline_s — used by the streaming
+        frontend, which fixes deadlines at admission time rather than at
+        the (later) instant the feeder releases the request."""
         T = len(request.tokens)
         assert T >= 1, "empty prompt"
         assert request.max_new_tokens >= 1, "max_new_tokens must be >= 1"
@@ -363,7 +374,9 @@ class ContinuousScheduler:
             "the continuous scheduler serves token-only requests"
         rid = self._next_rid
         self._next_rid += 1
-        if getattr(request, "deadline_s", None) is not None:
+        if deadline_at is not None:
+            self._deadlines[rid] = float(deadline_at)
+        elif getattr(request, "deadline_s", None) is not None:
             assert request.deadline_s > 0, "deadline_s must be > 0"
             self._deadlines[rid] = self._clock() + request.deadline_s
         self._queue.append((rid, request))
@@ -374,6 +387,23 @@ class ContinuousScheduler:
         """Slot occupancy (kept as the historical attribute name: the
         steady-state benchmark polls it between steps)."""
         return self._slots.rids
+
+    def backlog(self) -> int:
+        """Requests admitted but not yet pooled (queued + staging) — the
+        depth a frontend's feeder meters against."""
+        return len(self._queue) + len(self._staging)
+
+    def has_work(self) -> bool:
+        """True while anything is queued, staging, or pooled."""
+        return bool(self._queue or self._staging
+                    or self._slots.any_occupied())
+
+    def pop_completion(self, rid: int):
+        """Remove and return one finished request's Completion.  The
+        streaming frontend collects completions round by round from
+        `step()`'s return value; `run()` keeps its collect-everything
+        semantics for batch callers."""
+        return self._results.pop(rid)
 
     def _free_slots(self) -> list[int]:
         return self._slots.free()
@@ -765,10 +795,26 @@ class ContinuousScheduler:
         stag = self._staging_slots()
         fin = [i for i, rid in enumerate(self._slot_rid)
                if rid is not None and done[i] and i not in stag]
+        if self.stream_cb is not None:
+            live = [i for i, rid in enumerate(self._slot_rid)
+                    if rid is not None and i not in stag and not done[i]]
+            self._stream_rows(live, self._pool["buf"], self._pool["gen"],
+                              self._slot_rid)
         if not fin:
             return []
         return self._complete(fin, np.asarray(self._pool["buf"]),
                               np.asarray(self._pool["gen"]))
+
+    def _stream_rows(self, rows: list[int], buf, gen, rids) -> None:
+        """Publish tokens-so-far for still-running slots (the finishers'
+        full buffers travel in their Completions instead).  One buf/gen
+        host copy per streamed round — the price of streaming, paid only
+        when a `stream_cb` is attached."""
+        if not rows:
+            return
+        buf, gen = np.asarray(buf), np.asarray(gen)
+        for i in rows:
+            self.stream_cb(rids[i], buf[i, :gen[i]])
 
     def _snapshot_chunk(self, rids: list, active: np.ndarray) -> None:
         """Capture the just-dispatched chunk's observable state and start
@@ -795,9 +841,16 @@ class ContinuousScheduler:
         if p is None:
             return []
         done = np.asarray(p["done"])
-        fin = [i for i, rid in enumerate(self._slot_rid)
-               if rid is not None and p["active"][i]
-               and p["rids"][i] == rid and done[i]]
+        eligible = [i for i, rid in enumerate(self._slot_rid)
+                    if rid is not None and p["active"][i]
+                    and p["rids"][i] == rid]
+        fin = [i for i in eligible if done[i]]
+        if self.stream_cb is not None:
+            # stream from the drained chunk's own snapshot: the rows are
+            # consistent with the done flags just read, even though the
+            # next chunk is already in flight on the device
+            self._stream_rows([i for i in eligible if not done[i]],
+                              p["buf"], p["gen"], p["rids"])
         if not fin:
             return []
         return self._complete(fin, np.asarray(p["buf"]),

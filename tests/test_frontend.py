@@ -1,0 +1,415 @@
+"""Overload-robust streaming frontend invariants.
+
+The contract under test, from strongest to weakest traffic light:
+
+  * with every overload feature disabled the frontend is a bit-identical
+    pass-through over the continuous scheduler (greedy tokens unchanged,
+    streaming is read-only);
+  * under a 10x client stampede the admission queue stays bounded, the
+    rejections are typed and deterministic, interactive traffic is never
+    starved (p99 TTFT within the SLO) while best-effort is rejected, and
+    every request resolves to exactly one ladder rung — nothing hangs;
+  * the circuit breaker opens at the high watermark and only closes
+    below the low one (hysteresis), deadline eviction composes with
+    rejection, and the launcher refuses inapplicable flag combinations
+    at parse time.
+"""
+import asyncio
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import backbone as bb
+from repro.serve.engine import Request
+from repro.serve.faults import ArrivalBurst, FaultInjector, parse_faults
+from repro.serve.frontend import (
+    Delta,
+    Finish,
+    FirstToken,
+    FrontendConfig,
+    Overloaded,
+    Priority,
+    SimClient,
+    StreamingFrontend,
+    VirtualClock,
+    drive_closed_loop,
+)
+from repro.serve.scheduler import ContinuousScheduler, SchedulerConfig
+
+KEY = jax.random.PRNGKey(0)
+SCHED = dict(buckets=(8, 16), max_slots=2, prefill_group=1, chunk=2)
+
+
+@pytest.fixture(scope="module")
+def system():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = bb.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=5):
+    rng = np.random.RandomState(seed)
+    return [Request(tokens=rng.randint(0, cfg.vocab,
+                                       int(rng.choice((4, 8, 12)))),
+                    max_new_tokens=max_new)
+            for _ in range(n)]
+
+
+def _frontend(cfg, params, *, frontend=None, clock=None, **sched_kw):
+    kw = dict(SCHED)
+    kw.update(sched_kw)
+    return StreamingFrontend(cfg, params, frontend=frontend,
+                             sched=SchedulerConfig(**kw), max_len=32,
+                             seed=0, clock=clock)
+
+
+def _stampede_fleet(cfg, n_per_class=4, n_reqs=3, think_s=0.0):
+    """A closed-loop fleet whose offered load is ~10x the 2-slot pool."""
+    clients = []
+    for c in range(3 * n_per_class):
+        clients.append(SimClient(
+            requests=tuple(_requests(cfg, n_reqs, seed=c)),
+            priority=Priority(c % 3), start_s=0.05 * c, think_s=think_s))
+    return clients
+
+
+# ------------------------------------------------------- bit-identity --
+
+
+def test_passthrough_tokens_bit_identical(system):
+    """Defaults (no queue bound, no SLO, one class) = pass-through: the
+    scheduler sees submission order and greedy tokens are unchanged."""
+    cfg, params = system
+    reqs = _requests(cfg, 8)
+    ref = ContinuousScheduler(cfg, params, sched=SchedulerConfig(**SCHED),
+                              max_len=32, seed=0)
+    rids = [ref.submit(r) for r in reqs]
+    out = ref.run()
+    want = {i: np.asarray(out[rid].tokens) for i, rid in enumerate(rids)}
+    fe = _frontend(cfg, params, clock=VirtualClock())
+    fids = [fe.submit(r) for r in reqs]
+    got = fe.run()
+    for i, fid in enumerate(fids):
+        status, toks = got[fid]
+        assert status == "served"
+        np.testing.assert_array_equal(toks, want[i])
+
+
+def test_stream_events_reassemble_exactly(system):
+    """Per-request event streams are FirstToken, Delta*, Finish, in
+    token order, and concatenating the token events reproduces the
+    completion bit-for-bit."""
+    cfg, params = system
+    reqs = _requests(cfg, 6)
+    fe = _frontend(cfg, params, clock=VirtualClock())
+    fids = [fe.submit(r) for r in reqs]
+    results = fe.run()
+    per = {fid: [ev for ev in fe.events if ev.rid == fid] for fid in fids}
+    for fid in fids:
+        evs = per[fid]
+        assert isinstance(evs[0], FirstToken)
+        assert isinstance(evs[-1], Finish)
+        assert all(isinstance(e, Delta) for e in evs[1:-1])
+        toks = [e.token for e in evs[:-1]]
+        np.testing.assert_array_equal(toks, results[fid][1])
+        # timestamps are monotone along the stream
+        ts = [e.t for e in evs]
+        assert ts == sorted(ts)
+
+
+def test_streaming_is_incremental_not_bulk(system):
+    """A long decode publishes tokens across multiple rounds — the
+    stream is not one bulk dump at completion."""
+    cfg, params = system
+    fe = _frontend(cfg, params, clock=VirtualClock())
+    fid = fe.submit(Request(tokens=list(range(1, 9)), max_new_tokens=12))
+    rounds = []
+    while fe.has_work():
+        evs = fe.step()
+        rounds.append(sum(isinstance(e, (FirstToken, Delta))
+                          for e in evs if e.rid == fid))
+    assert sum(rounds) == 12
+    assert sum(1 for n in rounds if n) > 1, \
+        "all tokens arrived in a single round — streaming is bulk"
+
+
+# ----------------------------------------------------------- overload --
+
+
+def test_stampede_bounds_queue_and_rejects_deterministically(system):
+    """The acceptance scenario: scripted 10x ArrivalBurst into a bounded
+    frontend.  Queue depth never exceeds the bound, interactive p99 TTFT
+    holds the SLO while best-effort is rejected, every request resolves
+    on the ladder, and a rerun is event-for-event identical."""
+    cfg, params = system
+
+    def run():
+        clock = VirtualClock()
+        fe = _frontend(
+            cfg, params, clock=clock,
+            frontend=FrontendConfig(max_queue=4, slo_ms=250.0))
+        depths = []
+        orig_step = fe.step
+
+        def step():
+            evs = orig_step()
+            depths.append(fe.queue_depth())
+            return evs
+
+        fe.step = step
+        rep = drive_closed_loop(
+            fe, _stampede_fleet(cfg), clock=clock, round_s=0.01,
+            faults=FaultInjector((ArrivalBurst(factor=10.0),), seed=7))
+        return rep, depths
+
+    rep, depths = run()
+    assert max(depths) <= 4, f"queue depth {max(depths)} broke the bound"
+    assert all(r.status in ("served", "shed", "rejected")
+               for r in rep.records), "a request left the ladder"
+    ttft = rep.ttft_ms(Priority.INTERACTIVE)
+    assert len(ttft) and float(np.percentile(ttft, 99)) <= 250.0, \
+        "interactive starved: p99 TTFT above the SLO under stampede"
+    be = rep.of(Priority.BEST_EFFORT)
+    assert any(r.status == "rejected" for r in be), \
+        "a 10x stampede must reject best-effort at admission"
+    for r in rep.records:
+        if r.status == "rejected":
+            assert r.retry_after_s > 0.0
+    rep2, depths2 = run()
+    assert depths == depths2
+    assert [(r.status, r.t_submit, r.t_done) for r in rep.records] \
+        == [(r.status, r.t_submit, r.t_done) for r in rep2.records], \
+        "rerun diverged — overload behaviour is not deterministic"
+
+
+def test_overloaded_is_typed_with_retry_hint(system):
+    cfg, params = system
+    fe = _frontend(cfg, params, clock=VirtualClock(),
+                   frontend=FrontendConfig(max_queue=2))
+    for r in _requests(cfg, 2):
+        fe.submit(r)
+    with pytest.raises(Overloaded) as ei:
+        fe.submit(_requests(cfg, 1)[0])
+    assert ei.value.reason == "queue full"
+    assert ei.value.queue_depth == 2
+    assert ei.value.retry_after_s > 0.0
+    fe.run()    # the two admitted requests still drain
+
+
+def test_breaker_hysteresis(system):
+    """The breaker opens at the high watermark, sheds BEST_EFFORT, and
+    stays open until depth falls below the LOW watermark — no flapping
+    in the band between the two."""
+    cfg, params = system
+    fe = _frontend(cfg, params, clock=VirtualClock(),
+                   frontend=FrontendConfig(max_queue=8, breaker_high=0.75,
+                                           breaker_low=0.25))
+    req = _requests(cfg, 1)[0]
+    for depth in (4, 5):                      # below high: closed
+        fe.queue_depth = lambda d=depth: d
+        fe._update_breaker()
+        assert not fe.breaker_open
+    fe.queue_depth = lambda: 6                # at high (0.75 * 8): opens
+    with pytest.raises(Overloaded) as ei:
+        fe.submit(req, Priority.BEST_EFFORT)
+    assert ei.value.reason == "breaker"
+    assert fe.breaker_open
+    fe.queue_depth = lambda: 4                # inside the band: stays open
+    with pytest.raises(Overloaded):
+        fe.submit(req, Priority.BEST_EFFORT)
+    fe.queue_depth = lambda: 2                # at low (0.25 * 8): closes
+    fe._update_breaker()
+    assert not fe.breaker_open
+    fid = fe.submit(req, Priority.BEST_EFFORT)
+    del fe.queue_depth                        # restore the real method
+    assert fe.run()[fid][0] == "served"
+
+
+def test_feed_order_is_priority_then_edf(system):
+    """With metered feeding, release order is best class first and
+    earliest deadline first within a class, regardless of submission
+    order (FIFO only on deadline ties)."""
+    cfg, params = system
+    fe = _frontend(cfg, params, clock=VirtualClock(),
+                   frontend=FrontendConfig(max_queue=16, feed_depth=1))
+    order = []
+    orig = fe.sched.submit
+
+    def spy(req, **kw):
+        order.append(req.max_new_tokens)
+        return orig(req, **kw)
+
+    fe.sched.submit = spy
+    rng = np.random.RandomState(0)
+
+    def req(tag, dl):
+        return Request(tokens=rng.randint(0, cfg.vocab, 4),
+                       max_new_tokens=tag, deadline_s=dl)
+
+    fe.submit(req(3, None), Priority.BEST_EFFORT)
+    fe.submit(req(4, 50.0), Priority.BATCH)
+    fe.submit(req(5, 90.0), Priority.INTERACTIVE)
+    fe.submit(req(6, 40.0), Priority.INTERACTIVE)
+    fe.submit(req(7, None), Priority.INTERACTIVE)
+    results = fe.run()
+    # interactive EDF (40 < 90 < no-deadline), then batch, then best-effort
+    assert order == [6, 5, 7, 4, 3]
+    assert all(st == "served" for st, _ in results.values())
+
+
+def test_deadline_eviction_composes_with_rejection(system):
+    """A waiting request whose deadline lapses is shed (never prefilled),
+    a fourth arrival past the bound is rejected, and the survivors are
+    served — three ladder rungs out of one overload episode."""
+    cfg, params = system
+    clock = VirtualClock()
+    fe = _frontend(cfg, params, clock=clock,
+                   frontend=FrontendConfig(max_queue=3))
+    rng = np.random.RandomState(0)
+    r_ok = fe.submit(Request(tokens=rng.randint(0, cfg.vocab, 4),
+                             max_new_tokens=4))
+    r_dead = fe.submit(Request(tokens=rng.randint(0, cfg.vocab, 4),
+                               max_new_tokens=4, deadline_s=0.05))
+    r_slow = fe.submit(Request(tokens=rng.randint(0, cfg.vocab, 4),
+                               max_new_tokens=4, deadline_s=60.0))
+    with pytest.raises(Overloaded):
+        fe.submit(Request(tokens=rng.randint(0, cfg.vocab, 4),
+                          max_new_tokens=4))
+    clock.now += 0.1                      # r_dead's deadline lapses
+    results = fe.run()
+    assert results[r_ok][0] == "served"
+    assert results[r_dead][0] == "shed"
+    assert len(results[r_dead][1]) < 4    # shed partial, never completed
+    assert results[r_slow][0] == "served"
+
+
+# ------------------------------------------------------- ArrivalBurst --
+
+
+def test_arrival_burst_closed_form():
+    inj = FaultInjector((ArrivalBurst(t0=1.0, t1=3.0, factor=4.0),))
+    assert inj.arrival_time(0, 2.0) == pytest.approx(1.25)
+    assert inj.arrival_time(0, 1.0) == pytest.approx(1.0)
+    assert inj.arrival_time(0, 0.5) == 0.5      # before the window
+    assert inj.arrival_time(0, 3.0) == 3.0      # at/after the window
+    scoped = FaultInjector((ArrivalBurst(factor=10.0, clients=(1,)),))
+    assert scoped.arrival_time(0, 2.0) == 2.0   # other clients untouched
+    assert scoped.arrival_time(1, 2.0) == pytest.approx(0.2)
+    with pytest.raises(ValueError):
+        ArrivalBurst(factor=0.5)
+
+
+def test_parse_faults_stampede_roundtrip():
+    (ev,) = parse_faults("stampede:1:3:4")
+    assert ev == ArrivalBurst(t0=1.0, t1=3.0, factor=4.0)
+    (ev,) = parse_faults("stampede")
+    assert ev == ArrivalBurst()
+    assert math.isinf(ev.t1) and ev.factor == 10.0
+
+
+def test_gateway_stampede_resolves_on_ladder():
+    """The gateway under ArrivalBurst + bounded admission: every request
+    resolves to exactly one ladder rung and overload is refused at the
+    door (rejected), not buffered."""
+    from repro.configs.agilenn_cifar import gateway_demo_config
+    from repro.core.agile import init_agile_params
+    from repro.serve.gateway import (
+        Fleet, GatewayConfig, OffloadGateway, mixed_fleet)
+
+    cfg = gateway_demo_config()
+    params = init_agile_params(cfg, jax.random.PRNGKey(0))
+    specs = mixed_fleet(8, n_requests=4, deadline_ms=150.0)
+    fleet = Fleet(cfg, params, specs, seed=0)
+    inj = FaultInjector((ArrivalBurst(factor=10.0),), seed=7)
+    rep = OffloadGateway(cfg, params, fleet,
+                         GatewayConfig(batch_width=4, max_queue=2),
+                         faults=inj).run()
+    assert len(rep.traces) == 8 * 4
+    ladder = {"served", "degraded", "shed", "rejected", "fallback"}
+    assert {tr.status for tr in rep.traces} <= ladder
+    assert rep.rejected_rate > 0.0
+
+
+# ------------------------------------------------------------- async --
+
+
+def test_async_stream_matches_run(system):
+    """The asyncio iterator yields the same typed events the sync path
+    records, terminated by Finish, with serve_forever driving rounds."""
+    cfg, params = system
+    reqs = _requests(cfg, 2)
+
+    async def go():
+        fe = _frontend(cfg, params, clock=VirtualClock())
+        server = asyncio.ensure_future(fe.serve_forever())
+        evs = [await _collect(fe.stream(r)) for r in reqs]
+        fe.close()
+        await server
+        return fe, evs
+
+    fe, evs = asyncio.run(go())
+    ref = _frontend(cfg, params, clock=VirtualClock())
+    fids = [ref.submit(r) for r in reqs]
+    want = ref.run()
+    for fid, stream in zip(fids, evs):
+        assert isinstance(stream[0], FirstToken)
+        assert isinstance(stream[-1], Finish)
+        assert stream[-1].status == "served"
+        np.testing.assert_array_equal(
+            [e.token for e in stream[:-1]], want[fid][1])
+
+
+def test_async_wait_turns_rejection_into_backpressure(system):
+    """stream(..., wait=True) retries after the hint instead of failing:
+    the client slows down, the request eventually serves."""
+    cfg, params = system
+
+    async def go():
+        fe = _frontend(cfg, params,
+                       frontend=FrontendConfig(max_queue=1))
+        r1, r2 = _requests(cfg, 2)
+        server = asyncio.ensure_future(fe.serve_forever())
+        first = asyncio.ensure_future(
+            _collect(fe.stream(r1, Priority.INTERACTIVE)))
+        await asyncio.sleep(0)            # r1 admitted, queue now full
+        second = await _collect(fe.stream(r2, Priority.INTERACTIVE,
+                                          wait=True))
+        fe.close()
+        await server
+        return await first, second
+
+    evs1, evs2 = asyncio.run(go())
+    assert evs1[-1].status == "served"
+    assert evs2[-1].status == "served"
+
+
+async def _collect(aiter):
+    return [ev async for ev in aiter]
+
+
+# --------------------------------------------------- launcher guards --
+
+
+@pytest.mark.parametrize("argv", [
+    ["--arch", "qwen2-0.5b", "--prefix-cache"],
+    ["--arch", "qwen2-0.5b", "--serialized"],
+    ["--slo-ms", "40"],
+    ["--arch", "qwen2-0.5b", "--local", "--slo-ms", "40"],
+    ["--arch", "qwen2-0.5b", "--queue", "4", "--max-queue", "2"],
+    ["--arch", "qwen2-0.5b", "--queue", "4", "--priority", "batch"],
+    ["--arch", "qwen2-0.5b", "--queue", "4", "--slo-ms", "40"],
+    ["--faults", "stampede"],
+    ["--arch", "qwen2-0.5b", "--deadline-ms", "100"],
+    ["--gateway", "4", "--queue", "4"],
+    ["--gateway", "4", "--mesh", "2"],
+])
+def test_launcher_rejects_inapplicable_flags(argv):
+    """Scoped flags outside their mode are parse-time errors (argparse
+    exits 2), not silent no-ops."""
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit) as ei:
+        main(argv)
+    assert ei.value.code == 2

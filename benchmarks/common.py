@@ -74,13 +74,53 @@ def eval_accuracy(predict_fn, data, *, n_batches: int = 3,
     return float(np.mean(accs))
 
 
+# ---------------------------------------------------- timing helpers --
+# The min-of-N / median-of-N / percentile arithmetic every suite used to
+# hand-roll lives here.  The minimum — not the mean — is the timing
+# estimator of choice: scheduler preemption and frequency ramps only
+# ever *add* time, so min-of-N is the stable estimate of the code's
+# actual cost, and the --compare regression gate needs numbers that
+# don't wobble with box load.
+
+
+def best_of(fn, n: int) -> float:
+    """Minimum of ``n`` calls of ``fn()`` (min-of-N timing)."""
+    return min(fn() for _ in range(n))
+
+
+def median_of(fn, n: int) -> float:
+    """Middle value of ``n`` calls of ``fn()`` — for quantities where a
+    cold-start minimum would flatter (cache-hit timings)."""
+    vals = sorted(fn() for _ in range(n))
+    return vals[n // 2]
+
+
+def paired_best_of(fns: dict, n: int) -> dict:
+    """Min-of-N over several candidates, *alternating within each
+    round* so a load spike lands on every candidate of the round and
+    the comparison between them stays fair; returns {key: min}."""
+    best = {k: float("inf") for k in fns}
+    for _ in range(n):
+        for k, fn in fns.items():
+            best[k] = min(best[k], fn())
+    return best
+
+
+def pctl(values, q: float) -> float:
+    """Exact percentile through the telemetry histogram's exact mode —
+    bit-identical to ``np.percentile`` on the same samples (the
+    closed-form bucketed estimate is for live registries; bench rows
+    pin exact values)."""
+    from repro.serve.telemetry import Histogram
+    h = Histogram.exact()
+    for v in np.asarray(values, np.float64).ravel():
+        h.observe(float(v))
+    return h.percentile(q)
+
+
 def timed_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     """Best-of-iters call time in microseconds.
 
-    The minimum — not the mean — is reported: scheduler preemption and
-    frequency ramps only ever *add* time, so min-of-N is the stable
-    estimator of the code's actual cost, and the --compare regression
-    gate needs numbers that don't wobble with box load.
     jax.block_until_ready handles arbitrary pytrees (tuples of arrays,
     host-side lists), so async dispatch can't leak out of the timing.
     """
@@ -90,9 +130,10 @@ def timed_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    best = float("inf")
-    for _ in range(iters):
+
+    def once() -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+        return time.perf_counter() - t0
+
+    return best_of(once, iters) * 1e6

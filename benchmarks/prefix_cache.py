@@ -21,6 +21,8 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import median_of
+
 KEY = jax.random.PRNGKey(0)
 
 N_CLIENTS = 16
@@ -58,14 +60,16 @@ def prefix_cache_rows() -> list[tuple]:
                                   prefill_segment=0,
                                   prefix_cache=prefix_on))
         reqs = _requests(cfg)
-        dts = []
-        for rep in range(REPS + 1):        # rep 0 warms: pays compiles
+
+        def once() -> float:
             for r in reqs:
                 sched.submit(r)
             t0 = time.time()
             sched.run()
-            dts.append(time.time() - t0)
-        return sorted(dts[1:])[REPS // 2], sched
+            return time.time() - t0
+
+        once()                             # warm-up drain: pays compiles
+        return median_of(once, REPS), sched
 
     tails = "/".join(str(t) for t in TAILS)
     pin = (f"{N_CLIENTS} reqs shared {SYS_LEN}-tok sys prompt "

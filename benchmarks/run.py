@@ -23,13 +23,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
                          "kernels, serve, serve_sharded, gateway, faults, "
-                         "prefix, stream, roofline)")
+                         "prefix, stream, telemetry, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: cheap suites only (kernels, serve, "
-                         "gateway, faults, prefix, stream) with shrunk "
-                         "workloads")
+                         "gateway, faults, prefix, stream, telemetry) with "
+                         "shrunk workloads")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="regression gate: compare collected rows against a "
                          "JSON baseline and exit 2 if any matching row "
@@ -52,6 +52,7 @@ def main(argv=None) -> None:
     from benchmarks.serve_sharded import serve_sharded_rows
     from benchmarks.serve_steady import serve_steady_rows
     from benchmarks.stream_slo import stream_slo_rows
+    from benchmarks.telemetry_bench import telemetry_rows
 
     suites = dict(ALL_FIGURES)
     suites.update(ABLATIONS)
@@ -62,6 +63,7 @@ def main(argv=None) -> None:
     suites["faults"] = faults_rows
     suites["prefix"] = prefix_cache_rows
     suites["stream"] = stream_slo_rows
+    suites["telemetry"] = telemetry_rows
     suites["roofline"] = roofline_rows
 
     if args.only:
@@ -71,7 +73,7 @@ def main(argv=None) -> None:
         # device topology, and only the multi-device CI job (forced
         # 8-device mesh, --only serve_sharded) has baseline rows to match
         selected = ["kernels", "serve", "gateway", "faults", "prefix",
-                    "stream"]
+                    "stream", "telemetry"]
     else:
         selected = list(suites)
     print("name,value,derived")
@@ -119,19 +121,28 @@ def compare_rows(collected: list, baseline_path: str) -> list:
     move them, so they are excluded from the median and gated
     symmetrically on their raw ratio — a >25% drift in EITHER direction
     is a semantic change to the simulation (an intentional one ships a
-    regenerated baseline).
+    regenerated baseline).  Rows ending in "_pct" are *already* ratios
+    (telemetry overhead as a percentage of the uninstrumented drain):
+    machine speed cancels out of them, so instead of baseline-ratio math
+    they are gated against an absolute ceiling — >= 5% fails outright.
     """
     with open(baseline_path) as f:
         base = {r["name"]: r for r in json.load(f)["rows"]}
     pairs = []
+    pct_fails = []
     for row in collected:
         b = base.get(row["name"])
         if (b is None or b.get("derived") != row["derived"]
                 or not isinstance(row["value"], (int, float))
-                or not isinstance(b["value"], (int, float))
-                or not b["value"] or not row["value"]):
+                or not isinstance(b["value"], (int, float))):
             continue
         name = row["name"]
+        if name.endswith("_pct"):
+            if row["value"] >= 5.0:
+                pct_fails.append((name, float(row["value"])))
+            continue
+        if not b["value"] or not row["value"]:
+            continue
         lower_better = name.endswith(".us") or name.endswith("_ms") \
             or name.endswith(".ms")
         higher_better = "per_s" in name
@@ -147,10 +158,14 @@ def compare_rows(collected: list, baseline_path: str) -> list:
         else:
             continue
         pairs.append((name, ratio, deterministic))
-    if not pairs:
-        print(f"compare: no comparable rows in {baseline_path}",
+    for n, v in pct_fails:
+        print(f"REGRESSION {n}: {v:.2f}% >= 5% absolute ceiling",
               file=sys.stderr)
-        return []
+    if not pairs:
+        if not pct_fails:
+            print(f"compare: no comparable rows in {baseline_path}",
+                  file=sys.stderr)
+        return pct_fails
     walls = sorted(r for _, r, det in pairs if not det) \
         or sorted(r for _, r, _ in pairs)
     mid = len(walls) // 2                          # machine-speed median:
@@ -167,10 +182,10 @@ def compare_rows(collected: list, baseline_path: str) -> list:
     for n, raw, rel in regressions:
         print(f"REGRESSION {n}: {raw:.2f}x slower than baseline "
               f"({rel:.2f}x after machine normalization)", file=sys.stderr)
-    if not regressions:
+    if not regressions and not pct_fails:
         print(f"compare: {len(pairs)} rows within 25% of {baseline_path} "
               f"(median speed ratio {scale:.2f})", file=sys.stderr)
-    return regressions
+    return regressions + pct_fails
 
 
 if __name__ == "__main__":

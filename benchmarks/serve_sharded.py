@@ -65,12 +65,10 @@ def serve_sharded_rows() -> list[tuple]:
     # spike on a shared CI box hits both rows, not just one — the
     # overlap-vs-serialized comparison stays meaningful under noise
     scheds = {True: build(True), False: build(False)}
-    best = {True: float("inf"), False: float("inf")}
-    for _ in range(3):
-        for overlap, sched in scheds.items():
-            dt = _drain_with_poisson_arrivals(
-                sched, reqs, np.random.RandomState(1), rate=3.0)
-            best[overlap] = min(best[overlap], dt)
+    best = common.paired_best_of(
+        {overlap: (lambda s=sched: _drain_with_poisson_arrivals(
+            s, reqs, np.random.RandomState(1), rate=3.0))
+         for overlap, sched in scheds.items()}, 3)
 
     pin = f"{n_requests} reqs Poisson mix {lengths} max_new={max_new}"
     return [

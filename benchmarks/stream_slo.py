@@ -21,6 +21,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from benchmarks.common import pctl
+
 KEY = jax.random.PRNGKey(0)
 
 ROUND_S = 0.01          # modeled service time of one scheduler round
@@ -72,11 +74,11 @@ def stream_slo_rows() -> list[tuple]:
     pin = (f"{3 * N_PER_CLASS} clients x{N_REQS} reqs stampede(10x) "
            f"maxq=6 slo=250ms round={ROUND_S * 1e3:g}ms")
     return [
-        ("stream.ttft_p50_ms", float(np.percentile(inter, 50)),
+        ("stream.ttft_p50_ms", pctl(inter, 50),
          f"{pin} interactive, simulated"),
-        ("stream.ttft_p99_ms", float(np.percentile(inter, 99)),
+        ("stream.ttft_p99_ms", pctl(inter, 99),
          f"{pin} interactive, simulated"),
-        ("stream.itl_p99_ms", float(np.percentile(itl, 99)),
+        ("stream.itl_p99_ms", pctl(itl, 99),
          f"{pin} all classes, simulated"),
         ("stream.reject_rate", rep.reject_rate,
          f"{pin} all classes, simulated"),

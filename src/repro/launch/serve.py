@@ -26,11 +26,30 @@ no-op.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 
-def _serve_queue(cfg, params, args) -> int:
+def _dump_telemetry(tel, args) -> None:
+    """End-of-run reporting, one path for every mode: the registry's
+    Prometheus-style text goes to stderr, and --metrics-json /
+    --trace-out persist the flat dump and the Chrome trace (load the
+    trace in Perfetto / chrome://tracing)."""
+    text = tel.metrics.prometheus_text()
+    if text:
+        sys.stderr.write(text)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(tel.metrics.to_dict(), f, indent=1, default=str)
+        print(f"wrote {args.metrics_json}", file=sys.stderr)
+    if args.trace_out:
+        tel.trace.write(args.trace_out)
+        print(f"wrote {args.trace_out} "
+              f"({len(tel.trace.spans)} spans)", file=sys.stderr)
+
+
+def _serve_queue(cfg, params, args, tel) -> int:
     """Mixed-length request queue through the ServeEngine scheduler."""
     import numpy as np
     from repro.serve.engine import Request, ServeEngine
@@ -54,6 +73,7 @@ def _serve_queue(cfg, params, args) -> int:
         shared = rng.randint(0, cfg.vocab, n_pages * page)
     max_len = len(shared) + max(lengths) + args.tokens + 8
     eng = ServeEngine(cfg, params, max_len=max_len, mesh=mesh,
+                      telemetry=tel,
                       scheduler=SchedulerConfig(
                           buckets=tuple(len(shared) + b for b in lengths),
                           overlap=not args.serialized,
@@ -72,18 +92,19 @@ def _serve_queue(cfg, params, args) -> int:
             if mesh is not None else "")
     print(f"served {len(reqs)} mixed-length requests{topo} "
           f"({toks} tokens) in {dt:.2f}s -> {toks / dt:.1f} tok/s")
-    if args.prefix_cache:
-        pc = eng.scheduler.prefix
-        print(f"prefix cache: hit_rate {pc.hit_rate:.2f} over "
-              f"{pc.stats['page_lookups']} page lookups, "
-              f"{pc.n_hot} hot / {pc.n_cold} cold pages resident, "
-              f"cold tier {pc.cold_used_bytes / 2**20:.2f} MiB "
-              f"({pc.stats['demotions']} demotions, "
-              f"{pc.stats['promotions']} promotions)")
+    # end-of-run stats (prefix-cache tiers included) all flow through the
+    # metrics dump — no mode-specific ad-hoc stat printing
+    m = tel.metrics
+    m.gauge("serve.requests").set(len(reqs))
+    m.gauge("serve.tokens").set(toks)
+    m.gauge("serve.wall_s").set(dt)
+    m.gauge("serve.tokens_per_s").set(toks / dt)
+    eng.scheduler.export_metrics()
+    _dump_telemetry(tel, args)
     return 0
 
 
-def _serve_stream(cfg, params, args) -> int:
+def _serve_stream(cfg, params, args, tel) -> int:
     """Mixed-length queue through the overload-robust streaming frontend
     (bounded admission, priority classes, typed rejections)."""
     import numpy as np
@@ -102,7 +123,7 @@ def _serve_stream(cfg, params, args) -> int:
                                 slo_ms=args.slo_ms),
         sched=SchedulerConfig(buckets=lengths,
                               overlap=not args.serialized),
-        max_len=max(lengths) + args.tokens + 8)
+        max_len=max(lengths) + args.tokens + 8, telemetry=tel)
     born = {}
     n_rej = 0
     t0 = time.time()
@@ -129,10 +150,18 @@ def _serve_stream(cfg, params, args) -> int:
           f"{by['served']} served, {by['shed']} shed, {n_rej} rejected; "
           f"{n_tok} tokens in {dt:.2f}s -> {n_tok / dt:.1f} tok/s"
           + (f"; ttft p50 {ttft[len(ttft) // 2]:.1f} ms" if ttft else ""))
+    m = tel.metrics
+    m.gauge("stream.tokens").set(n_tok)
+    m.gauge("stream.wall_s").set(dt)
+    m.gauge("stream.tokens_per_s").set(n_tok / dt)
+    if ttft:
+        m.gauge("stream.ttft_p50_ms").set(ttft[len(ttft) // 2])
+    fe.sched.export_metrics()
+    _dump_telemetry(tel, args)
     return 0
 
 
-def _serve_gateway(args) -> int:
+def _serve_gateway(args, tel) -> int:
     """Drive a simulated weak-device fleet through the offload gateway."""
     import jax
     from repro.configs.agilenn_cifar import gateway_demo_config
@@ -150,15 +179,23 @@ def _serve_gateway(args) -> int:
               if args.faults else None)
     report = OffloadGateway(
         cfg, params, fleet, GatewayConfig(batch_width=args.batch_width),
-        faults=faults).run()
+        faults=faults, telemetry=tel).run()
     mode = ("static rate" if args.slo_ms is None
             else f"adaptive rate, SLO {args.slo_ms:g} ms")
     if args.faults:
         mode += f", faults '{args.faults}' seed {args.fault_seed}"
     print(f"gateway: {args.gateway} clients x {args.requests} reqs "
           f"({mode}), pool width {args.batch_width}")
+    # the report summary lands in the registry and flows out through the
+    # same metrics dump every other mode uses
+    m = tel.metrics
     for k, v in report.summary().items():
-        print(f"  {k}: {v}")
+        if isinstance(v, dict):
+            for sub, sv in v.items():
+                m.gauge(f"gateway.{k}", channel=sub).set(sv)
+        else:
+            m.gauge(f"gateway.{k}").set(v)
+    _dump_telemetry(tel, args)
     return 0
 
 
@@ -273,11 +310,22 @@ def main(argv=None) -> int:
                          "radio stops retrying past it, late arrivals are "
                          "shed at admission, and the device degrades to "
                          "its Local-NN logits (default: no deadline)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run's spans "
+                         "(open in Perfetto / chrome://tracing); applies "
+                         "to every mode")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the end-of-run metrics registry as flat "
+                         "JSON (the Prometheus-style text always goes to "
+                         "stderr); applies to every mode")
     args = ap.parse_args(argv)
     _validate_flags(ap, args)
 
+    from repro.serve.telemetry import Telemetry
+    tel = Telemetry(enabled=True)
+
     if args.gateway:
-        return _serve_gateway(args)
+        return _serve_gateway(args, tel)
     if args.arch is None:
         ap.error("--arch is required (unless --gateway N is given)")
 
@@ -300,8 +348,8 @@ def main(argv=None) -> int:
 
     if args.queue:
         if args.stream:
-            return _serve_stream(cfg, params, args)
-        return _serve_queue(cfg, params, args)
+            return _serve_stream(cfg, params, args, tel)
+        return _serve_queue(cfg, params, args, tel)
 
     B, T = 2, 16
     batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab)}
@@ -311,17 +359,23 @@ def main(argv=None) -> int:
     if cfg.encdec is not None:
         batch["frames"] = jax.random.normal(
             key, (B, cfg.encdec.n_frames, cfg.d_model))
-    logits, cache, total_T = bb.prefill(cfg, params, batch,
-                                        max_len=T + args.tokens + 8)
+    with tel.span("prefill", track="engine", B=B, T=T):
+        logits, cache, total_T = bb.prefill(cfg, params, batch,
+                                            max_len=T + args.tokens + 8)
     decode = jax.jit(lambda p, t, c, n: bb.decode_step(cfg, p, t, c, n))
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     cl = total_T
     t0 = time.time()
-    for i in range(args.tokens):
-        logits, cache = decode(params, tok, cache, cl)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        cl += 1
-    print(f"decoded {args.tokens} tokens x {B} in {time.time() - t0:.2f}s")
+    with tel.span("decode", track="engine", tokens=args.tokens):
+        for i in range(args.tokens):
+            logits, cache = decode(params, tok, cache, cl)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            cl += 1
+    dt = time.time() - t0
+    tel.note_compiles("launch.decode_step", decode, shape=f"B{B}")
+    tel.metrics.gauge("serve.tokens_per_s").set(args.tokens * B / dt)
+    print(f"decoded {args.tokens} tokens x {B} in {dt:.2f}s")
+    _dump_telemetry(tel, args)
     return 0
 
 

@@ -123,10 +123,12 @@ def _stack_extras(requests: list[Request]) -> dict:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
                  seed: int = 0, scheduler: Optional[SchedulerConfig] = None,
-                 mesh=None):
+                 mesh=None, telemetry=None):
+        from repro.serve import telemetry as _telemetry
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.tel = telemetry if telemetry is not None else _telemetry.default()
         self.mesh = mesh            # scheduler path only: slot pool shards
                                     # over the data axes, params go tensor-
                                     # parallel (launch.partition)
@@ -159,7 +161,8 @@ class ServeEngine:
         if self._sched is None:
             self._sched = ContinuousScheduler(
                 self.cfg, self.params, sched=self._sched_cfg,
-                max_len=self.max_len, seed=self._seed + 1, mesh=self.mesh)
+                max_len=self.max_len, seed=self._seed + 1, mesh=self.mesh,
+                telemetry=self.tel)
         return self._sched
 
     def generate(self, requests: list[Request]) -> list[Completion]:
@@ -215,6 +218,9 @@ class ServeEngine:
 
         logits, cache, total_T = self._prefill(self.params, batch,
                                                max_len=self.max_len)
+        if self.tel.enabled:
+            self.tel.note_compiles("engine.prefill", self._prefill,
+                                   shape=f"T{T}xB{len(requests)}")
         total_T = int(total_T)
         max_new = max(r.max_new_tokens for r in requests)
         assert max_new <= self.max_len, \
@@ -236,6 +242,10 @@ class ServeEngine:
             self.params, logits, cache, total_T, sub, eos_ids, max_lens,
             jnp.int32(max_new), jnp.asarray(temps),
             buf_len=self.max_len, greedy=bool(np.all(temps <= 0.0)))
+        if self.tel.enabled:
+            self.tel.note_compiles(
+                "engine.decode_loop", self._loop,
+                shape=f"buf{self.max_len}_greedy{bool(np.all(temps <= 0.0))}")
         # the single device->host transfer of the decode phase
         buf, lengths, steps = (np.asarray(buf), np.asarray(lengths),
                                int(steps))

@@ -217,12 +217,15 @@ class StreamingFrontend:
                  frontend: Optional[FrontendConfig] = None,
                  sched: Optional[SchedulerConfig] = None,
                  max_len: int = 256, seed: int = 0, mesh=None,
-                 clock=None, faults=None):
+                 clock=None, faults=None, telemetry=None):
+        from repro.serve import telemetry as _telemetry
         self.fcfg = frontend or FrontendConfig()
+        self.tel = telemetry if telemetry is not None else _telemetry.default()
         self._clock = clock if clock is not None else time.monotonic
         self.sched = ContinuousScheduler(
             cfg, params, sched=sched, max_len=max_len, seed=seed,
-            mesh=mesh, clock=self._clock, faults=faults)
+            mesh=mesh, clock=self._clock, faults=faults,
+            telemetry=self.tel)
         self.sched.stream_cb = self._on_stream
         sc = self.sched.sched
         self._feed_cap = (self.fcfg.feed_depth if self.fcfg.feed_depth
@@ -241,6 +244,9 @@ class StreamingFrontend:
         self.rejections: list = []               # (t, Priority, Overloaded)
         self.breaker_open = False
         self._rate: Optional[float] = None       # served requests / s
+        self._t_admit: dict[int, float] = {}     # rid -> submit instant
+                                                 # (telemetry-enabled only:
+                                                 # queue_wait span starts)
         self._t_last = self._clock()
         self._step_events: list = []
         self._closed = False
@@ -290,15 +296,24 @@ class StreamingFrontend:
     def _update_breaker(self) -> None:
         if self.fcfg.max_queue is None:
             return
+        was = self.breaker_open
         depth = self.queue_depth()
         if depth >= self.fcfg.breaker_high * self.fcfg.max_queue:
             self.breaker_open = True
         elif depth <= self.fcfg.breaker_low * self.fcfg.max_queue:
             self.breaker_open = False
+        if self.tel.enabled and was != self.breaker_open:
+            self.tel.counter(
+                "frontend.breaker_transitions",
+                to="open" if self.breaker_open else "closed").inc()
 
     def _reject(self, reason: str, priority: Priority, depth: int):
         err = Overloaded(reason, self._retry_after(depth), depth)
         self.rejections.append((self._clock(), priority, err))
+        if self.tel.enabled:
+            self.tel.counter("frontend.admission", verdict="rejected",
+                             reason=reason.replace(" ", "_"),
+                             priority=priority.name).inc()
         raise err
 
     def submit(self, request, priority: Priority = Priority.INTERACTIVE,
@@ -328,6 +343,11 @@ class StreamingFrontend:
         deadline = math.inf if dl_s is None else now + dl_s
         self._reqs[rid] = request
         self._deadline[rid] = deadline
+        if self.tel.enabled:
+            self.tel.counter("frontend.admission", verdict="admitted",
+                             priority=priority.name).inc()
+            self._t_admit[rid] = now     # queue_wait span start (reuses
+                                         # the admission clock read)
         heapq.heappush(self._classes[priority],
                        (deadline, next(self._seq), rid))
         if self.fcfg.max_queue is None:
@@ -355,9 +375,13 @@ class StreamingFrontend:
                 return
             deadline, _, rid = item
             req = self._reqs.pop(rid)
-            if deadline <= self._clock():
+            now = self._clock()          # one read per item, as before
+            if deadline <= now:
                 self._finish_local(rid, "shed")
                 continue
+            if self.tel.enabled and rid in self._t_admit:
+                self.tel.trace.add("queue_wait", self._t_admit.pop(rid),
+                                   now, track=f"req {rid}", cat="frontend")
             srid = self.sched.submit(
                 req, deadline_at=None if deadline == math.inf else deadline)
             self._to_sched[rid] = srid
@@ -406,7 +430,15 @@ class StreamingFrontend:
         self._deadline.pop(rid, None)
         toks = np.zeros((0,), np.int32)
         self._results[rid] = (status, toks)
-        self._emit(Finish(rid, status, toks, self._clock()))
+        t = self._clock()
+        if self.tel.enabled:
+            self.tel.counter("frontend.finish", status=status).inc()
+            t0 = self._t_admit.pop(rid, None)
+            if t0 is not None:
+                self.tel.trace.add("queue_wait", t0, t,
+                                   track=f"req {rid}", cat="frontend",
+                                   status=status)
+        self._emit(Finish(rid, status, toks, t))
 
     def _finish_sched(self, srid: int) -> str:
         rid = self._from_sched.pop(srid)
@@ -418,6 +450,8 @@ class StreamingFrontend:
         self._published.pop(rid, None)
         status = "shed" if comp.timed_out else "served"
         self._results[rid] = (status, toks)
+        if self.tel.enabled:
+            self.tel.counter("frontend.finish", status=status).inc()
         self._emit(Finish(rid, status, toks, self._clock()))
         return status
 
@@ -446,6 +480,14 @@ class StreamingFrontend:
             self._rate = (inst if self._rate is None
                           else (1 - a) * self._rate + a * inst)
         self._update_breaker()
+        if self.tel.enabled:
+            m = self.tel.metrics
+            for p in Priority:
+                m.gauge("frontend.queue_depth",
+                        priority=p.name).set(len(self._classes[p]))
+            m.gauge("frontend.queue_depth_total").set(self.queue_depth())
+            m.gauge("frontend.service_rate_rps").set(self._rate or 0.0)
+            m.gauge("frontend.breaker_open").set(int(self.breaker_open))
         return self._step_events
 
     def run(self) -> dict:

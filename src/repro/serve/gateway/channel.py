@@ -92,6 +92,9 @@ class Delivery:
     delivered: bool = True   # False: retry budget / deadline exhausted
     expired: bool = False    # True: the per-request deadline stopped the
                              # retries (a deadline miss, not a dead link)
+    attempt_log: tuple = ()  # per-attempt (t_start, t_end, lost) windows —
+                             # the gaps between them are the backoff waits;
+                             # telemetry turns each into a radio span
 
 
 class Channel:
@@ -137,8 +140,10 @@ class Channel:
         cap = cfg.max_attempts if cfg.max_attempts > 0 else RETRY_SAFETY_CAP
         t, attempts, airtime, scaled = t_send, 0, 0.0, False
         delivered, expired = True, False
+        log: list = []
         while True:
             attempts += 1
+            t_att = t                    # this attempt's on-air window start
             ser_i = ser
             if link is not None:
                 scale = link.bandwidth_scale(t)
@@ -151,15 +156,20 @@ class Channel:
             if link is not None and link.attempt_lost(t):
                 # forced loss: no final-attempt rescue — a dark link
                 # delivers nothing, however many times the app retries
+                log.append((t_att, t, True))
                 if attempts >= cap:
                     delivered = False
                     break
             elif (attempts >= cfg.max_attempts > 0
                     or float(self._rng.uniform()) >= cfg.drop_prob):
+                log.append((t_att, t, False))
                 break
             elif attempts >= cap:        # max_attempts == 0 under benign
+                log.append((t_att, t, True))
                 delivered = False        # 100% loss: the safety cap ends
                 break                    # the loop as a failed delivery
+            else:
+                log.append((t_att, t, True))
             wait = self._retry_wait(attempts)
             if deadline_s is not None and t + wait >= deadline_s:
                 delivered, expired = False, True   # no retry can land in time
@@ -176,7 +186,7 @@ class Channel:
         if not delivered:
             return Delivery(arrive_s=t, device_free_s=t, airtime_s=airtime,
                             attempts=attempts, delivered=False,
-                            expired=expired)
+                            expired=expired, attempt_log=tuple(log))
         return Delivery(arrive_s=t + cfg.propagation_s + jitter,
                         device_free_s=t, airtime_s=airtime,
-                        attempts=attempts)
+                        attempts=attempts, attempt_log=tuple(log))

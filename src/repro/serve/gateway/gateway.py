@@ -69,6 +69,9 @@ from repro.serve.device_model import DeviceModel
 from repro.serve.event_loop import EventLoop
 from repro.serve.gateway.fleet import DeviceClient, Fleet, Payload
 from repro.serve.scheduler import SlotPool
+from repro.serve.telemetry import exponential
+
+_MS_BOUNDS = exponential(0.25, 2.0, 16)    # 0.25 ms .. ~8.2 s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,12 +213,16 @@ class _InFlight:
     slot: int = -1             # pool slot (= Remote-NN batch row) occupied
     deadline: float = math.inf  # absolute; heap/admission priority
     status: str = "served"     # downgraded to "degraded" on erasure
+    delivery: object = None    # the radio's Delivery (attempt windows for
+                               # telemetry hop spans)
 
 
 class OffloadGateway:
     def __init__(self, cfg: AgileNNConfig, params, fleet: Fleet,
                  gw: "GatewayConfig | None" = None, *,
-                 server: "DeviceModel | None" = None, faults=None):
+                 server: "DeviceModel | None" = None, faults=None,
+                 telemetry=None):
+        from repro.serve import telemetry as _telemetry
         assert fleet.cfg is cfg or fleet.cfg == cfg
         self.cfg = cfg
         self.params = params
@@ -223,6 +230,8 @@ class OffloadGateway:
         self.gw = gw or GatewayConfig()
         self.server = server or DeviceModel()
         self.faults = faults               # repro.serve.faults.FaultInjector
+        self.tel = telemetry if telemetry is not None \
+            else _telemetry.default()
         self._slots = SlotPool(self.gw.batch_width)
         # one compiled program per pool shape, cached module-wide
         self._remote = partial(remote_forward_jit,
@@ -237,6 +246,7 @@ class OffloadGateway:
         (corruption) keeps its WHOLE row zero — the `control.ERASED`
         floor of the masking ladder — and is marked degraded; the call
         still serves it."""
+        t_codec = self.tel.clock() if self.tel.enabled else 0.0
         W = self.gw.batch_width
         fh, Cr = self.fleet.feat_hw, self.fleet.n_remote
         deq = np.zeros((W, fh, fh, Cr), np.float32)
@@ -266,8 +276,64 @@ class OffloadGateway:
             vals = self.fleet.centers_for(bits)[idx]
             rows = [it.slot for it in ok]
             deq[rows, :, :, :keep] = vals.reshape(-1, fh, fh, keep)
+        if self.tel.enabled:
+            # wall cost of the gateway-side codec (LZW decode + unpack +
+            # dequantize) — the device-side encode is simulated time,
+            # folded into the device_compute span
+            self.tel.histogram("gateway.codec_ms", bounds=_MS_BOUNDS) \
+                .observe((self.tel.clock() - t_codec) * 1e3)
         out = self._remote(self.params, jnp.asarray(deq), jnp.asarray(ll))
         return np.asarray(out)
+
+    # -------------------------------------------------------- telemetry --
+    def _note_request(self, item: _InFlight, t_done: float, status: str,
+                      *, remote: bool) -> None:
+        """Emit one resolved request's hop spans (simulated timestamps —
+        no clock reads) and counters.  The spans tile the request's e2e
+        window: device queue/compute, each radio attempt with its
+        backoff gap, uplink propagation, gateway queue wait, the remote
+        slot-pool batch, and the response leg."""
+        tel = self.tel
+        if not tel.enabled:
+            return
+        p = item.payload
+        track = f"c{item.client.index} r{p.req}"
+        add = tel.trace.add
+        add("request", item.t_born, t_done, track=track, cat="gateway",
+            status=status, client=item.client.index, req=p.req,
+            channel=item.client.spec.channel.name)
+        if item.t_start > item.t_born:
+            add("device_queue", item.t_born, item.t_start, track=track,
+                cat="gateway")
+        add("device_compute", item.t_start, item.t_sent, track=track,
+            cat="gateway", payload_bytes=p.nbytes, bits=p.bits, keep=p.keep)
+        d = item.delivery
+        prev = item.t_sent
+        if d is not None:
+            for k, (a0, a1, lost) in enumerate(d.attempt_log):
+                if a0 > prev:
+                    add("radio_backoff", prev, a0, track=track,
+                        cat="gateway", before_attempt=k + 1)
+                add("radio_attempt", a0, a1, track=track, cat="gateway",
+                    attempt=k + 1, lost=lost)
+                prev = a1
+            if d.delivered and item.t_arrive > prev:
+                add("uplink", prev, item.t_arrive, track=track,
+                    cat="gateway")
+        if remote:
+            prop = item.client.spec.channel.propagation_s
+            if item.t_serve > item.t_arrive:
+                add("queue_wait", item.t_arrive, item.t_serve, track=track,
+                    cat="gateway")
+            add("remote_batch", item.t_serve, t_done - prop, track=track,
+                cat="gateway", slot=item.slot)
+            add("response", t_done - prop, t_done, track=track,
+                cat="gateway")
+        m = tel.metrics
+        m.counter("gateway.requests", status=status).inc()
+        m.counter("gateway.radio_attempts").inc(item.attempts)
+        m.histogram("gateway.e2e_ms", bounds=_MS_BOUNDS).observe(
+            (t_done - item.t_born) * 1e3)
 
     # -------------------------------------------------------- event loop --
     def run(self, loop: "EventLoop | None" = None) -> GatewayReport:
@@ -317,6 +383,7 @@ class OffloadGateway:
                 label=int(fleet.labels[row]),
                 status=status, deadline_missed=missed))
             t_end = max(t_end, t_done)
+            self._note_request(item, t_done, status, remote=False)
 
         def start_batch(t0: float) -> None:
             epoch[0] += 1                    # pending window flushes lapse
@@ -344,6 +411,15 @@ class OffloadGateway:
                 len(take) * fleet.remote_macs)
             if faults is not None:           # stalled slot pool: the batch
                 service += faults.server_stall_extra(t0)   # holds its slots
+            if self.tel.enabled:
+                self.tel.histogram(
+                    "gateway.batch_size",
+                    bounds=tuple(float(w) for w in
+                                 range(1, gw.batch_width + 1))
+                ).observe(len(take))
+                self.tel.trace.add("remote_batch", t0, t0 + service,
+                                   track="gateway", cat="gateway",
+                                   batch=len(take))
             busy[0] = True
             push(t0 + service, "serve", (take, logits))
 
@@ -369,7 +445,8 @@ class OffloadGateway:
                 item = _InFlight(
                     payload=payload, client=c, t_born=born, t_start=t,
                     t_sent=t_sent, t_arrive=d.arrive_s,
-                    attempts=d.attempts, energy_j=energy, deadline=deadline)
+                    attempts=d.attempts, energy_j=energy, deadline=deadline,
+                    delivery=d)
                 if faults is not None and d.delivered:
                     bad = faults.corrupt(data, t_sent, payload.codes)
                     if bad is not None:
@@ -399,6 +476,8 @@ class OffloadGateway:
                     resolve_local(data, t, "rejected", False)
                     continue
                 queue.append(data)
+                if self.tel.enabled:
+                    self.tel.gauge("gateway.queue_depth").set(len(queue))
                 if not busy[0]:
                     if len(queue) >= gw.batch_width:
                         start_batch(t)
@@ -435,6 +514,7 @@ class OffloadGateway:
                     status=item.status,
                     deadline_missed=t > item.deadline))
                 t_end = max(t_end, t)
+                self._note_request(item, t, item.status, remote=True)
 
         t_begin = min(born_at(c.index, 0) for c in fleet.clients
                       if c.spec.n_requests)

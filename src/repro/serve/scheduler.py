@@ -72,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
+from contextlib import nullcontext
 from functools import partial
 from typing import Optional
 
@@ -82,6 +83,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.kernels.common import round_up
 from repro.models import backbone as bb
+from repro.serve import telemetry as _telemetry
+
+_NULL = nullcontext()     # reentrant: shared no-op for disabled telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,12 +183,17 @@ class ContinuousScheduler:
     def __init__(self, cfg: ArchConfig, params, *,
                  sched: Optional[SchedulerConfig] = None,
                  max_len: int = 256, seed: int = 0, mesh=None,
-                 clock=None, faults=None):
+                 clock=None, faults=None, telemetry=None):
         """clock: wall-time source for request deadlines (default
         `time.monotonic`; tests inject a fake for determinism).
         faults: a `repro.serve.faults.FaultInjector` whose
         `chunk_stalled(round)` stalls decode rounds — requests then leave
-        through deadline eviction instead of hanging the drain loop."""
+        through deadline eviction instead of hanging the drain loop.
+        telemetry: a `repro.serve.telemetry.Telemetry`; the module
+        default is disabled, and every hook below guards on
+        `tel.enabled`, so an uninstrumented run does zero extra clock
+        reads or device->host copies (telemetry never reads `clock` —
+        injected test clocks advance on every read)."""
         assert supports_continuous_batching(cfg), \
             f"{cfg.name}: continuous batching needs a pure-attention " \
             "RoPE decoder (use ServeEngine's equal-length grouping)"
@@ -194,6 +203,7 @@ class ContinuousScheduler:
         self.max_len = max_len
         self.mesh = mesh
         self.faults = faults
+        self.tel = telemetry if telemetry is not None else _telemetry.default()
         self._clock = clock if clock is not None else time.monotonic
         self._deadlines: dict[int, float] = {}   # rid -> absolute clock()
         self._round = 0
@@ -347,6 +357,40 @@ class ContinuousScheduler:
         return pool, key
 
     # --------------------------------------------------------------- host --
+
+    def _span(self, name: str):
+        """Wall span on the scheduler track; shared no-op when telemetry
+        is disabled (no clock read, no allocation)."""
+        if not self.tel.enabled:
+            return _NULL
+        return self.tel.span(name, track="scheduler", cat="sched",
+                             round=self._round)
+
+    def export_metrics(self) -> None:
+        """Refresh per-round gauges, compile counters, and the re-export
+        of the prefix cache's `stats` dict into the registry.  Called at
+        the end of every round while telemetry is enabled (and by the
+        launcher before the final dump)."""
+        tel = self.tel
+        if not tel.enabled:
+            return
+        m = tel.metrics
+        m.gauge("sched.pool_occupancy").set(
+            sum(r is not None for r in self._slots.rids))
+        m.gauge("sched.backlog").set(self.backlog())
+        m.gauge("sched.staging").set(len(self._staging))
+        tel.note_compiles("sched.decode_chunk", self._chunk,
+                          shape=f"slots{len(self._slots)}")
+        tel.note_compiles("sched.inject", self._inject,
+                          shape=f"slots{len(self._slots)}")
+        if self.prefix is not None:
+            for k, v in self.prefix.stats.items():
+                m.gauge(f"prefix.{k}").set(v)
+            m.gauge("prefix.hit_rate").set(self.prefix.hit_rate)
+            m.gauge("prefix.hot_pages").set(self.prefix.n_hot)
+            m.gauge("prefix.cold_pages").set(self.prefix.n_cold)
+            m.gauge("prefix.cold_used_bytes").set(
+                self.prefix.cold_used_bytes)
 
     def _bucket_of(self, prompt_len: int) -> int:
         fits = [b for b in self.sched.buckets
@@ -562,6 +606,11 @@ class ContinuousScheduler:
         logits0, rows, _ = self._prefill(
             self.params, jnp.asarray(g["tokens"]), jnp.asarray(g["lengths"]),
             max_len=self._copy_width(g["bucket"]))
+        if self.tel.enabled:
+            self.tel.note_compiles("sched.prefill", self._prefill,
+                                   shape=f"bucket{g['bucket']}")
+            self.tel.counter("sched.admitted", path="group").inc(
+                int((g["slots"] < self.sched.max_slots).sum()))
         if self.prefix is not None:
             for i, (keys, slot) in enumerate(zip(g["pkeys"], g["slots"])):
                 self.prefix.record(len(keys), 0)
@@ -632,6 +681,10 @@ class ContinuousScheduler:
                 jnp.asarray(ends_here)[:, None], lg, logits0)
             if d + page >= int(lengths.max()):
                 break
+        if self.tel.enabled:
+            self.tel.note_compiles("sched.prefill_chunk", self._prefill_chunk,
+                                   shape=f"bucket{g['bucket']}")
+            self.tel.counter("sched.admitted", path="prefix").inc(len(take))
         for i, ((_, _, keys), slot) in enumerate(zip(take, g["slots"])):
             self.prefix.record(len(keys), H)
             self.prefix.pin(int(slot), keys, cache["k"][:, :, i],
@@ -695,6 +748,9 @@ class ContinuousScheduler:
         logits, st["cache"] = self._prefill_chunk(
             self.params, toks, st["cache"], jnp.int32(d),
             attend_width=st["bucket"], last_index=jnp.int32(last))
+        if self.tel.enabled:
+            self.tel.note_compiles("sched.prefill_chunk", self._prefill_chunk,
+                                   shape=f"bucket{st['bucket']}")
         if d <= st["T"] - 1 < d + seg:
             st["logits0"] = logits          # segment holding the last token
         st["depth"] = d + seg
@@ -706,6 +762,8 @@ class ContinuousScheduler:
         """The staged cache joins the pool through the same page-granular
         inject as one-shot admissions (first token sampled in-graph)."""
         req = st["req"]
+        if self.tel.enabled:
+            self.tel.counter("sched.admitted", path="staged").inc()
         if self.prefix is not None and st["keys"]:
             self.prefix.pin(st["slot"], st["keys"],
                             st["cache"]["k"][:, :, 0], st["cache"]["v"][:, :, 0])
@@ -730,6 +788,10 @@ class ContinuousScheduler:
         slots drop to depth 0 so the paged decode kernel's max-depth
         branch follows live occupancy."""
         from repro.serve.engine import Completion
+        if self.tel.enabled and fin:
+            self.tel.counter(
+                "sched.evicted",
+                reason="deadline" if timed_out else "finished").inc(len(fin))
         out = []
         for i in fin:
             rid = self._slots.release(i)
@@ -884,14 +946,24 @@ class ContinuousScheduler:
         another prefill segment or decode chunk past its budget."""
         self._round += 1                # 0-based round index while inside:
                                         # _dispatch_chunk sees _round - 1
-        expired = self._expire_deadlines()
-        if self.sched.overlap:
-            return expired + self._step_overlapped()
-        self._advance_staging()
-        self._admit()
-        if self._dispatch_chunk() is None:
-            return expired
-        return expired + self._drain()
+        with self._span("round"):
+            expired = self._expire_deadlines()
+            if self.sched.overlap:
+                out = expired + self._step_overlapped()
+            else:
+                with self._span("prefill_segment"):
+                    self._advance_staging()
+                with self._span("admit"):
+                    self._admit()
+                with self._span("decode_chunk"):
+                    dispatched = self._dispatch_chunk()
+                if dispatched is None:
+                    out = expired
+                else:
+                    with self._span("evict"):
+                        out = expired + self._drain()
+        self.export_metrics()
+        return out
 
     def _step_overlapped(self) -> list[int]:
         """One pipelined round: round k's prefill work is dispatched, and
@@ -905,14 +977,19 @@ class ContinuousScheduler:
         finishers free their slots before chunk k dispatches, a second
         admission pass fills them, and completions simply report one
         round late."""
-        self._advance_staging()                # prefill segment (async)
-        self._admit()                          # overlap chunk k-1: bucket/
+        with self._span("prefill_segment"):
+            self._advance_staging()            # prefill segment (async)
+        with self._span("admit"):
+            self._admit()                      # overlap chunk k-1: bucket/
                                                # tokenize + inject dispatch
-        out = self._drain_pending()            # round k-1 lands (no idle
-        self._admit()                          # wait); freed slots admit
+        with self._span("evict"):
+            out = self._drain_pending()        # round k-1 lands (no idle
+        with self._span("admit"):
+            self._admit()                      # wait); freed slots admit
                                                # before this round's chunk
         rids = list(self._slot_rid)            # occupancy at dispatch time
-        active = self._dispatch_chunk()
+        with self._span("decode_chunk"):
+            active = self._dispatch_chunk()
         if active is not None:
             self._snapshot_chunk(rids, active)
         return out

@@ -149,3 +149,40 @@ def test_unknown_rows_are_ignored(tmp_path):
     rows = [{"name": "kernel.new_row.us", "value": 5.0, "derived": "y"},
             {"name": "kernel.errored", "value": "ERROR", "derived": ""}]
     assert compare_rows(rows, _baseline(tmp_path)) == []
+
+
+def _pct_baseline(tmp_path):
+    p = tmp_path / "pct.json"
+    p.write_text(json.dumps({"suites": [], "rows": [
+        {"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+        {"name": "telemetry.overhead_pct", "value": 1.0, "derived": "w"},
+    ]}))
+    return str(p)
+
+
+def test_pct_row_gated_on_absolute_ceiling_not_ratio(tmp_path):
+    """A _pct row is already a ratio: a jump from 0.5% to 2% is a 4x
+    baseline ratio but NOT a regression; crossing the 5% absolute
+    ceiling is, even on a uniformly slow box."""
+    fine = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "telemetry.overhead_pct", "value": 2.0, "derived": "w"}]
+    assert compare_rows(fine, _pct_baseline(tmp_path)) == []
+    over = [{"name": "kernel.a.us", "value": 200.0, "derived": "x"},
+            {"name": "telemetry.overhead_pct", "value": 7.5, "derived": "w"}]
+    regs = compare_rows(over, _pct_baseline(tmp_path))
+    assert [r[0] for r in regs] == ["telemetry.overhead_pct"]
+
+
+def test_pct_row_zero_value_still_compared(tmp_path):
+    """An overhead of exactly 0.0 must pass (the falsy-value skip that
+    protects ratio math from dividing by zero does not apply)."""
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "telemetry.overhead_pct", "value": 0.0, "derived": "w"}]
+    assert compare_rows(rows, _pct_baseline(tmp_path)) == []
+
+
+def test_pct_row_changed_workload_skipped(tmp_path):
+    rows = [{"name": "kernel.a.us", "value": 100.0, "derived": "x"},
+            {"name": "telemetry.overhead_pct", "value": 50.0,
+             "derived": "other-pin"}]
+    assert compare_rows(rows, _pct_baseline(tmp_path)) == []

@@ -374,14 +374,18 @@ def test_long_prompts_bucket_at_page_granularity(system):
     """Satellite (compile-cache bound): prompts above every configured
     bucket round up to the next page_size multiple instead of bucketing
     at their raw length — distinct long lengths share one prefill
-    compilation, and tokens still match the per-request reference."""
+    compilation (watched through the telemetry compile counter, not a
+    private cache poke), and tokens still match the reference."""
+    from repro.serve.telemetry import Telemetry
     cfg, params = system
     eng = _engine(cfg, params)
+    tel = Telemetry(enabled=True)
     sched = ContinuousScheduler(
         cfg, params, max_len=64,
         sched=SchedulerConfig(buckets=(8, 16), max_slots=4,
                               prefill_group=2, chunk=4, page_size=16,
-                              prefill_segment=0))   # group path only
+                              prefill_segment=0),   # group path only
+        telemetry=tel)
     assert sched._bucket_of(33) == 48
     assert sched._bucket_of(41) == 48
     assert sched._bucket_of(63) == 64               # capped at max_len
@@ -390,11 +394,41 @@ def test_long_prompts_bucket_at_page_granularity(system):
             for L in (33, 37, 41, 45)]
     rids = [sched.submit(r) for r in reqs]
     outs = sched.run()
-    assert sched._prefill._cache_size() == 1, \
+    assert tel.compile_count("sched.prefill") == 1, \
         "four long lengths in one page bucket must share one compilation"
+    assert tel.counter("jit.sched.prefill.compiles", shape="bucket48").n == 1
     for req, rid in zip(reqs, rids):
         np.testing.assert_array_equal(outs[rid].tokens,
                                       _reference(eng, req))
+
+
+def test_steady_state_decode_zero_recompiles(system):
+    """Satellite (telemetry compile counter): once a first drain has paid
+    the per-bucket prefill and fixed-width decode-chunk compiles, an
+    identically shaped second workload must record zero new jit
+    compilations — the steady-state guarantee the CI gate watches."""
+    from repro.serve.telemetry import Telemetry
+    cfg, params = system
+    tel = Telemetry(enabled=True)
+    sched = ContinuousScheduler(
+        cfg, params, max_len=64,
+        sched=SchedulerConfig(buckets=(8, 16), max_slots=4,
+                              prefill_group=2, chunk=4),
+        telemetry=tel)
+    rng = np.random.RandomState(21)
+
+    def batch():
+        for L in (8, 16, 8, 16):
+            sched.submit(Request(tokens=rng.randint(0, cfg.vocab, L),
+                                 max_new_tokens=3))
+        sched.run()
+
+    batch()                                 # pays every compile
+    warm = tel.compile_count("sched")
+    assert warm >= 3                        # two prefill buckets + chunk
+    batch()                                 # same shapes: steady state
+    assert tel.compile_count("sched") == warm, \
+        "steady-state decode recompiled"
 
 
 def test_stale_snapshot_skips_readmitted_slot(system):

@@ -1,0 +1,143 @@
+"""Recovery benchmark: crash-replay cost and preemption TTFT, on a
+virtual clock.
+
+Scenario A is the pinned crash+stampede chaos run: a 12-request burst
+(mixed priority classes, journal attached) loses its engine to a
+scripted `EngineCrash` mid-decode; `recover` replays the journal into a
+fresh frontend.  The rows are exact outputs of the simulation —
+`recovery.replay_ms` is the replay drain's round count times the
+modeled ``ROUND_S``, and `recovery.lost_requests` counts journaled
+submissions missing from the merged results.  The no-lost-work contract
+is *asserted* here (the bench aborts if any request is lost) because
+`compare_rows` skips zero-valued rows — the row is kept for visibility,
+the assert is the gate.
+
+Scenario B pins preemption's reason to exist: with BEST_EFFORT hogs
+holding every slot, INTERACTIVE arrivals land their first token only
+after a suspend frees a slot — `stream.preempt_ttft_p99_ms` is that
+TTFT on the shared virtual clock.
+
+Both workloads are pinned (no --smoke shrink) so smoke rows stay
+comparable to the committed baseline; derived strings end in
+"simulated" so `benchmarks.run.compare_rows` gates them symmetrically
+on raw ratio.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import pctl
+
+KEY = jax.random.PRNGKey(0)
+
+ROUND_S = 0.01          # modeled service time of one scheduler round
+N_BURST = 12            # requests in the crash scenario's stampede
+CRASH_ROUND = 8         # scheduler round the engine dies at
+N_INTER = 4             # interactive arrivals in the preempt scenario
+
+
+def _drive(fe, clock):
+    while fe.has_work():
+        clock.now += ROUND_S
+        fe.step()
+    out, fe._results = fe._results, {}
+    return out
+
+
+def _crash_replay_rows(cfg, params) -> list[tuple]:
+    from repro.serve.engine import Request
+    from repro.serve.faults import EngineCrash, EngineCrashError, \
+        FaultInjector
+    from repro.serve.frontend import (
+        FrontendConfig, Priority, StreamingFrontend, VirtualClock)
+    from repro.serve.recovery import RequestJournal, recover
+    from repro.serve.scheduler import SchedulerConfig
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(tokens=rng.randint(0, cfg.vocab,
+                                       int(rng.choice((4, 8, 12)))),
+                    max_new_tokens=int(4 + rng.randint(0, 4)))
+            for _ in range(N_BURST)]
+    sched = SchedulerConfig(buckets=(8, 16), max_slots=4,
+                            prefill_group=2, chunk=2)
+    journal = RequestJournal()
+    clock = VirtualClock()
+    fe = StreamingFrontend(
+        cfg, params, frontend=FrontendConfig(),
+        sched=sched, max_len=32, seed=0, clock=clock, journal=journal,
+        faults=FaultInjector((EngineCrash(CRASH_ROUND),)))
+    for i, r in enumerate(reqs):            # the stampede: one burst
+        fe.submit(r, Priority(i % 3))
+    try:
+        _drive(fe, clock)
+        raise AssertionError("scripted crash never fired")
+    except EngineCrashError:
+        pass
+
+    clock2 = VirtualClock(clock.now)
+    fe2 = StreamingFrontend(cfg, params, frontend=FrontendConfig(),
+                            sched=sched, max_len=32, seed=0, clock=clock2)
+    merged = recover(fe2, journal, drive=lambda: _drive(fe2, clock2))
+    submitted = {rec["rid"] for rec in journal.events
+                 if rec["ev"] == "submit"}
+    lost = len(submitted - set(merged))
+    assert lost == 0, f"recovery lost {lost} journaled requests"
+    replay_ms = fe2.sched._round * ROUND_S * 1e3
+    pin = (f"{N_BURST}-req stampede crash@r{CRASH_ROUND} "
+           f"round={ROUND_S * 1e3:g}ms")
+    return [
+        ("recovery.replay_ms", replay_ms, f"{pin}, simulated"),
+        ("recovery.lost_requests", float(lost),
+         f"{pin} gated at 0 by in-bench assert, simulated"),
+    ]
+
+
+def _preempt_ttft_rows(cfg, params) -> list[tuple]:
+    from repro.serve.engine import Request
+    from repro.serve.frontend import (
+        FirstToken, FrontendConfig, Priority, StreamingFrontend,
+        VirtualClock)
+    from repro.serve.scheduler import SchedulerConfig
+
+    rng = np.random.RandomState(1)
+    hogs = [Request(tokens=rng.randint(0, cfg.vocab, 8),
+                    max_new_tokens=12) for _ in range(2)]
+    inters = [Request(tokens=rng.randint(0, cfg.vocab, 8),
+                      max_new_tokens=4) for _ in range(N_INTER)]
+    clock = VirtualClock()
+    fe = StreamingFrontend(
+        cfg, params,
+        frontend=FrontendConfig(max_queue=8, feed_depth=1,
+                                preempt_wait_ms=0.0),
+        sched=SchedulerConfig(buckets=(8, 16), max_slots=2,
+                              prefill_group=1, chunk=2, preempt=True),
+        max_len=32, seed=0, clock=clock)
+    for h in hogs:
+        fe.submit(h, Priority.BEST_EFFORT)
+    while fe.sched._free_slots() and fe.has_work():
+        clock.now += ROUND_S
+        fe.step()
+    born = {}
+    for q in inters:                # arrive against a saturated pool
+        rid = fe.submit(q, Priority.INTERACTIVE)
+        born[rid] = clock.now
+    _drive(fe, clock)
+    ttft = np.asarray([(ev.t - born[ev.rid]) * 1e3 for ev in fe.events
+                       if isinstance(ev, FirstToken) and ev.rid in born])
+    assert len(ttft) == N_INTER, "an interactive stream never started"
+    pin = (f"{len(hogs)} hogs + {N_INTER} interactive preempt "
+           f"maxq=8 round={ROUND_S * 1e3:g}ms")
+    return [
+        ("stream.preempt_ttft_p99_ms", pctl(ttft, 99),
+         f"{pin} interactive, simulated"),
+    ]
+
+
+def recovery_rows() -> list[tuple]:
+    from repro.configs import get_config
+    from repro.models import backbone as bb
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = bb.init_params(cfg, KEY)
+    return _crash_replay_rows(cfg, params) + _preempt_ttft_rows(cfg, params)

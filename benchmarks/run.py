@@ -23,13 +23,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig16..fig24, tab2, "
                          "kernels, serve, serve_sharded, gateway, faults, "
-                         "prefix, stream, telemetry, roofline)")
+                         "prefix, stream, recovery, telemetry, roofline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the collected rows as a JSON baseline")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: cheap suites only (kernels, serve, "
-                         "gateway, faults, prefix, stream, telemetry) with "
-                         "shrunk workloads")
+                         "gateway, faults, prefix, stream, recovery, "
+                         "telemetry) with shrunk workloads")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="regression gate: compare collected rows against a "
                          "JSON baseline and exit 2 if any matching row "
@@ -48,6 +48,7 @@ def main(argv=None) -> None:
     from benchmarks.kernel_micro import kernel_micro_rows
     from benchmarks.paper_figures import ALL_FIGURES
     from benchmarks.prefix_cache import prefix_cache_rows
+    from benchmarks.recovery import recovery_rows
     from benchmarks.roofline_table import roofline_rows
     from benchmarks.serve_sharded import serve_sharded_rows
     from benchmarks.serve_steady import serve_steady_rows
@@ -63,6 +64,7 @@ def main(argv=None) -> None:
     suites["faults"] = faults_rows
     suites["prefix"] = prefix_cache_rows
     suites["stream"] = stream_slo_rows
+    suites["recovery"] = recovery_rows
     suites["telemetry"] = telemetry_rows
     suites["roofline"] = roofline_rows
 
@@ -73,7 +75,7 @@ def main(argv=None) -> None:
         # device topology, and only the multi-device CI job (forced
         # 8-device mesh, --only serve_sharded) has baseline rows to match
         selected = ["kernels", "serve", "gateway", "faults", "prefix",
-                    "stream", "telemetry"]
+                    "stream", "recovery", "telemetry"]
     else:
         selected = list(suites)
     print("name,value,derived")

@@ -17,6 +17,10 @@ or a multi-client offload-gateway fleet run.
       --stream --max-queue 8 --priority mixed --slo-ms 500
                                    # streaming frontend: bounded admission,
                                    # priority classes, typed rejections
+  python -m repro.launch.serve --arch qwen2-0.5b --local --queue 24 \
+      --stream --max-queue 8 --priority mixed --preempt \
+      --journal journal.jsonl      # preemptible serving + crash-
+                                   # consistent request journal
 
 Flags are scope-checked at parse time: a flag that only applies to one
 mode (e.g. --prefix-cache without --queue, or --slo-ms without
@@ -117,13 +121,19 @@ def _serve_stream(cfg, params, args, tel) -> int:
     rng = np.random.RandomState(0)
     prios = (list(Priority) if args.priority == "mixed"
              else [Priority.parse(args.priority)])
+    journal = None
+    if args.journal:
+        from repro.serve.recovery import RequestJournal
+        journal = RequestJournal(args.journal, telemetry=tel)
     fe = StreamingFrontend(
         cfg, params,
         frontend=FrontendConfig(max_queue=args.max_queue,
                                 slo_ms=args.slo_ms),
         sched=SchedulerConfig(buckets=lengths,
-                              overlap=not args.serialized),
-        max_len=max(lengths) + args.tokens + 8, telemetry=tel)
+                              overlap=not args.serialized,
+                              preempt=args.preempt),
+        max_len=max(lengths) + args.tokens + 8, telemetry=tel,
+        journal=journal)
     born = {}
     n_rej = 0
     t0 = time.time()
@@ -150,6 +160,10 @@ def _serve_stream(cfg, params, args, tel) -> int:
           f"{by['served']} served, {by['shed']} shed, {n_rej} rejected; "
           f"{n_tok} tokens in {dt:.2f}s -> {n_tok / dt:.1f} tok/s"
           + (f"; ttft p50 {ttft[len(ttft) // 2]:.1f} ms" if ttft else ""))
+    if journal is not None:
+        journal.close()
+        print(f"wrote {args.journal} ({len(journal.events)} journal "
+              f"events)", file=sys.stderr)
     m = tel.metrics
     m.gauge("stream.tokens").set(n_tok)
     m.gauge("stream.wall_s").set(dt)
@@ -211,6 +225,8 @@ _SCOPED_FLAGS = (
     ("--stream", "stream", "queue"),
     ("--priority", "priority", "stream"),
     ("--max-queue", "max_queue", "stream"),
+    ("--preempt", "preempt", "stream"),
+    ("--journal", "journal", "stream"),
     ("--requests", "requests", "gateway"),
     ("--batch-width", "batch_width", "gateway"),
     ("--deadline-ms", "deadline_ms", "gateway"),
@@ -281,6 +297,18 @@ def main(argv=None) -> int:
                     help="bound on admitted-but-unscheduled requests for "
                          "--stream; past it submissions are rejected "
                          "with a retry-after hint (default: unbounded)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="let --stream suspend the lowest-priority pooled "
+                         "request when an interactive arrival would "
+                         "otherwise wait for a free slot; the victim "
+                         "re-enters its class queue with its generated-"
+                         "so-far tokens preserved and resumes bit-"
+                         "identically")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="append-only crash-consistent request journal "
+                         "for --stream (crc32-framed JSONL of submit/"
+                         "admit/chunk/preempt/finish events); replayable "
+                         "via repro.serve.recovery.recover")
     ap.add_argument("--gateway", type=int, default=0, metavar="N",
                     help="simulate N weak-device clients through the "
                          "multi-client offload gateway")

@@ -27,6 +27,10 @@ those as *deterministic, seeded schedules* so chaos runs replay exactly:
     gateway's arrival events and by the streaming frontend's simulated
     driver, so overload is scriptable and replayable like every other
     fault.
+  * ``EngineCrash``       — the decode scheduler dies at the start of a
+    given round (`EngineCrashError`), losing the pool and every
+    in-flight request; `serve.recovery` replays them from the request
+    journal.
 
 `FaultInjector` owns all fault randomness (per-client RNGs seeded from
 one root seed), so the channels' own RNG streams — and therefore every
@@ -187,8 +191,28 @@ class SlotPoolStall:
                f"SlotPoolStall: need 0 <= r0 < r1, got [{self.r0}, {self.r1})")
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineCrash:
+    """Decode-scheduler fault: the engine dies at the start of
+    scheduling round ``r`` (0-based) — `ContinuousScheduler.step` raises
+    `EngineCrashError`, losing the pool and every in-flight chunk.  With
+    a request journal attached, `serve.recovery` reconstructs the
+    frontend from the journaled events and replays the in-flight
+    requests bit-identically; without one, this is the fault that proves
+    work *would* be lost."""
+    r: int = 0
+
+    def __post_init__(self):
+        _check(self.r >= 0, f"EngineCrash: need r >= 0, got {self.r}")
+
+
+class EngineCrashError(RuntimeError):
+    """The scripted `EngineCrash` fired: the scheduler's state is gone.
+    Callers holding a journal hand it to `serve.recovery.recover`."""
+
+
 FaultEvent = (Blackout, BurstLoss, LinkDegrade, DeviceStall, GatewayStall,
-              PayloadCorruption, ArrivalBurst, SlotPoolStall)
+              PayloadCorruption, ArrivalBurst, SlotPoolStall, EngineCrash)
 
 
 def _applies(ev, client: int) -> bool:
@@ -279,6 +303,8 @@ class FaultInjector:
                                  if isinstance(e, PayloadCorruption))
         self.pool_stalls = tuple(e for e in events
                                  if isinstance(e, SlotPoolStall))
+        self.crashes = tuple(e for e in events
+                             if isinstance(e, EngineCrash))
         self.arrival_bursts = tuple(e for e in events
                                     if isinstance(e, ArrivalBurst))
         self._rngs: dict[int, np.random.RandomState] = {}
@@ -317,6 +343,9 @@ class FaultInjector:
 
     def chunk_stalled(self, round_idx: int) -> bool:
         return any(ev.r0 <= round_idx < ev.r1 for ev in self.pool_stalls)
+
+    def crashed(self, round_idx: int) -> bool:
+        return any(ev.r == round_idx for ev in self.crashes)
 
     # --------------------------------------------------------- arrivals --
     def arrival_time(self, client: int, t: float) -> float:

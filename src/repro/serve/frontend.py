@@ -31,6 +31,19 @@ growth and blown deadlines.  This module makes overload a first-class,
     *hysteretically* — it only re-admits once depth falls below the
     low-water mark, so a saturated pool cannot flap between accept and
     reject.
+  * **Priority preemption** — with ``SchedulerConfig.preempt``, an
+    INTERACTIVE request that has waited past ``preempt_wait_ms`` with
+    the pool full *suspends* the lowest-priority, latest-deadline
+    pooled row mid-decode (`ContinuousScheduler.suspend`): the victim
+    re-enters its class queue with its partial tokens preserved and
+    resumes bit-identically when the pool drains — the suspended →
+    resumed lifecycle, one rung gentler than *shed*.
+  * **Request journal** — an attached `recovery.RequestJournal` records
+    submit/admit/token-chunk/preempt/finish write-ahead on the shared
+    clock timeline; after an `EngineCrash`, `recovery.recover` replays
+    the journal into a fresh frontend (`restore`) and regenerates every
+    in-flight request's tokens bit-identically, with exactly-once
+    `Finish` delivery.
   * **One clock** — the frontend, the scheduler's deadline evictions and
     the simulated drivers all read the same injectable clock
     (`VirtualClock` / `repro.serve.event_loop.EventLoop.now`), the same
@@ -59,7 +72,11 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serve.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.serve.scheduler import (
+    ContinuousScheduler,
+    SchedulerConfig,
+    Suspended,
+)
 
 # the full degradation ladder, most to least service delivered; the
 # frontend itself resolves requests as served / shed / rejected, the
@@ -112,6 +129,14 @@ class FrontendConfig:
                                       # prefill_group (keep the pool fed,
                                       # keep ordering at the frontend)
     ewma: float = 0.3                 # service-rate estimator smoothing
+    preempt_wait_ms: float = 0.0      # INTERACTIVE queue-wait budget:
+                                      # once an interactive waiter has
+                                      # aged past it with the pool full,
+                                      # the lowest-priority latest-
+                                      # deadline pooled row is suspended
+                                      # to make room (needs
+                                      # SchedulerConfig.preempt; 0 =
+                                      # preempt as soon as one waits)
 
     def __post_init__(self):
         if self.max_queue is not None and self.max_queue < 1:
@@ -135,6 +160,9 @@ class FrontendConfig:
         if self.feed_depth is not None and self.feed_depth < 1:
             raise ValueError(f"FrontendConfig.feed_depth must be >= 1 or "
                              f"None (got {self.feed_depth!r})")
+        if not self.preempt_wait_ms >= 0:
+            raise ValueError(f"FrontendConfig.preempt_wait_ms must be "
+                             f">= 0, got {self.preempt_wait_ms!r}")
 
 
 # ------------------------------------------------------- typed events --
@@ -217,9 +245,17 @@ class StreamingFrontend:
                  frontend: Optional[FrontendConfig] = None,
                  sched: Optional[SchedulerConfig] = None,
                  max_len: int = 256, seed: int = 0, mesh=None,
-                 clock=None, faults=None, telemetry=None):
+                 clock=None, faults=None, telemetry=None, journal=None):
+        """journal: a `repro.serve.recovery.RequestJournal` recording
+        submit/admit/token-chunk/preempt/finish events on this
+        frontend's clock timeline (write-ahead: every record lands
+        before its effect is observable).  All journal writes reuse
+        clock reads the frontend already makes, so an attached journal
+        is a bit-identical pass-through for tokens and event
+        timestamps; None (the default) skips the writes entirely."""
         from repro.serve import telemetry as _telemetry
         self.fcfg = frontend or FrontendConfig()
+        self.journal = journal
         self.tel = telemetry if telemetry is not None else _telemetry.default()
         self._clock = clock if clock is not None else time.monotonic
         self.sched = ContinuousScheduler(
@@ -233,7 +269,14 @@ class StreamingFrontend:
         self._classes: list[list] = [[] for _ in Priority]  # EDF heaps of
         self._seq = itertools.count()            # (deadline, seq, rid)
         self._reqs: dict[int, object] = {}       # waiting rid -> Request
+                                                 # (or Suspended: preempted,
+                                                 # awaiting resume)
         self._deadline: dict[int, float] = {}    # rid -> absolute deadline
+        self._prio: dict[int, Priority] = {}     # rid -> admission class
+        self._t_submit: dict[int, float] = {}    # rid -> admission instant
+                                                 # (reuses the submit clock
+                                                 # read; preemption budgets
+                                                 # age against it)
         self._next_rid = 0
         self._to_sched: dict[int, int] = {}
         self._from_sched: dict[int, int] = {}
@@ -343,6 +386,10 @@ class StreamingFrontend:
         deadline = math.inf if dl_s is None else now + dl_s
         self._reqs[rid] = request
         self._deadline[rid] = deadline
+        self._prio[rid] = priority
+        self._t_submit[rid] = now
+        if self.journal is not None:
+            self._journal_submit(rid, request, priority, deadline, now)
         if self.tel.enabled:
             self.tel.counter("frontend.admission", verdict="admitted",
                              priority=priority.name).inc()
@@ -356,12 +403,26 @@ class StreamingFrontend:
 
     # -------------------------------------------------------- feeding --
 
+    def _journal_submit(self, rid: int, request, priority: Priority,
+                        deadline: float, now: float) -> None:
+        """Write-ahead record of everything recovery needs to re-create
+        this admission: the prompt, budget, sampling knobs, class, and
+        absolute deadline (on the shared clock timeline)."""
+        self.journal.append(
+            "submit", rid, now,
+            prompt=np.asarray(request.tokens, np.int64).tolist(),
+            max_new=int(request.max_new_tokens),
+            eos=int(request.eos_id), temp=float(request.temperature),
+            prio=priority.name,
+            deadline=None if deadline == math.inf else float(deadline))
+
     def _feed(self) -> None:
         """Release admitted requests into the scheduler, best class
         first and EDF within it, while the scheduler backlog is below
         the feed depth (unmetered when no queue bound is set).  Requests
         whose deadline already lapsed while waiting resolve as *shed*
-        without ever costing a prefill."""
+        without ever costing a prefill — a suspended one resolves with
+        the tokens it generated before preemption."""
         while True:
             if (self.fcfg.max_queue is not None
                     and self.sched.backlog() >= self._feed_cap):
@@ -377,15 +438,32 @@ class StreamingFrontend:
             req = self._reqs.pop(rid)
             now = self._clock()          # one read per item, as before
             if deadline <= now:
-                self._finish_local(rid, "shed")
+                self._shed_waiting(rid, req)
                 continue
             if self.tel.enabled and rid in self._t_admit:
                 self.tel.trace.add("queue_wait", self._t_admit.pop(rid),
                                    now, track=f"req {rid}", cat="frontend")
-            srid = self.sched.submit(
-                req, deadline_at=None if deadline == math.inf else deadline)
+            deadline_at = None if deadline == math.inf else deadline
+            if isinstance(req, Suspended):
+                srid = self.sched.submit_suspended(req,
+                                                   deadline_at=deadline_at)
+            else:
+                srid = self.sched.submit(req, deadline_at=deadline_at)
             self._to_sched[rid] = srid
             self._from_sched[srid] = rid
+            if self.journal is not None:
+                self.journal.append("admit", rid, now)
+
+    def _shed_waiting(self, rid: int, req) -> None:
+        """Resolve a waiting request as shed; a suspended one keeps its
+        pre-preemption tokens (preemption never silently drops work) and
+        releases its parked prefix pins."""
+        if isinstance(req, Suspended):
+            self.sched.discard_suspended(req)
+            self._finish_local(rid, "shed",
+                               toks=np.asarray(req.generated, np.int32))
+        else:
+            self._finish_local(rid, "shed")
 
     def _expire_waiting(self) -> None:
         """Shed waiting requests whose deadline lapsed in the queue (the
@@ -395,8 +473,62 @@ class StreamingFrontend:
             h = self._classes[p]
             while h and h[0][0] <= now:
                 _, _, rid = heapq.heappop(h)
-                self._reqs.pop(rid)
-                self._finish_local(rid, "shed")
+                self._shed_waiting(rid, self._reqs.pop(rid))
+
+    # ----------------------------------------------------- preemption --
+
+    def _maybe_preempt(self) -> None:
+        """Make room for aged INTERACTIVE waiters by suspending pooled
+        lower-class rows (`SchedulerConfig.preempt` gates this; off by
+        default, so the pass-through contract is untouched).  The victim
+        is the lowest-priority, latest-deadline pooled row; it re-enters
+        its own class queue as a `Suspended` — bypassing admission
+        control, so a preempted request can never be rejected or
+        silently dropped — and resumes bit-identically when the pool
+        drains.  Waiters only become visible here while they sit in the
+        frontend's class queues, i.e. under a bounded `max_queue` with a
+        feeder metering the scheduler backlog."""
+        if not self.sched.sched.preempt:
+            return
+        h = self._classes[Priority.INTERACTIVE]
+        if not h or self.sched._free_slots():
+            return
+        now = self._clock()
+        budget = self.fcfg.preempt_wait_ms * 1e-3
+        waiters = sum(1 for _, _, rid in h
+                      if now - self._t_submit.get(rid, now) >= budget)
+        if not waiters:
+            return
+        stag = self.sched._staging_slots()
+        cands = []
+        for slot, srid in enumerate(self.sched._slot_rid):
+            if srid is None or slot in stag:
+                continue
+            rid = self._from_sched.get(srid)
+            if rid is None:
+                continue
+            prio = self._prio.get(rid, Priority.INTERACTIVE)
+            if prio > Priority.INTERACTIVE:
+                cands.append((int(prio),
+                              self._deadline.get(rid, math.inf), rid, srid))
+        cands.sort(reverse=True)         # worst class, latest deadline
+        for _, _, rid, srid in cands[:waiters]:
+            sus = self.sched.suspend(srid)
+            if sus is None:
+                continue                 # already finished: drains normally
+            del self._from_sched[srid]
+            del self._to_sched[rid]
+            prio = self._prio[rid]
+            self._reqs[rid] = sus
+            heapq.heappush(self._classes[prio],
+                           (self._deadline.get(rid, math.inf),
+                            next(self._seq), rid))
+            if self.journal is not None:
+                self.journal.append("preempt", rid, now,
+                                    n=int(len(sus.generated)))
+            if self.tel.enabled:
+                self.tel.counter("frontend.preempted",
+                                 victim=prio.name).inc()
 
     # --------------------------------------------------------- events --
 
@@ -413,6 +545,9 @@ class StreamingFrontend:
         if len(toks) <= n:
             return
         t = self._clock()
+        if self.journal is not None:     # write-ahead: the chunk is
+            self.journal.append(         # durable before it is emitted
+                "chunk", rid, t, toks=[int(x) for x in toks[n:]])
         for k in range(n, len(toks)):
             cls = FirstToken if k == 0 else Delta
             self._emit(cls(rid, int(toks[k]), t))
@@ -425,10 +560,20 @@ class StreamingFrontend:
         if rid is not None:
             self._emit_tokens(rid, toks)
 
-    def _finish_local(self, rid: int, status: str) -> None:
-        """Resolve a request that never reached the pool (queue-shed)."""
+    def _finish_local(self, rid: int, status: str, *,
+                      toks: Optional[np.ndarray] = None) -> None:
+        """Resolve a request without a scheduler completion: a queue
+        shed (no tokens) or a preempted-then-shed suspension (``toks``
+        carries its pre-preemption output, tail-published first so the
+        stream and the journal both see every token)."""
         self._deadline.pop(rid, None)
-        toks = np.zeros((0,), np.int32)
+        self._prio.pop(rid, None)
+        self._t_submit.pop(rid, None)
+        if toks is None:
+            toks = np.zeros((0,), np.int32)
+        if len(toks):
+            self._emit_tokens(rid, toks)     # tail the stream never saw
+        self._published.pop(rid, None)
         self._results[rid] = (status, toks)
         t = self._clock()
         if self.tel.enabled:
@@ -438,12 +583,17 @@ class StreamingFrontend:
                 self.tel.trace.add("queue_wait", t0, t,
                                    track=f"req {rid}", cat="frontend",
                                    status=status)
+        if self.journal is not None:
+            self.journal.append("finish", rid, t, status=status,
+                                n=int(len(toks)))
         self._emit(Finish(rid, status, toks, t))
 
     def _finish_sched(self, srid: int) -> str:
         rid = self._from_sched.pop(srid)
         self._to_sched.pop(rid)
         self._deadline.pop(rid, None)
+        self._prio.pop(rid, None)
+        self._t_submit.pop(rid, None)
         comp = self.sched.pop_completion(srid)
         toks = np.asarray(comp.tokens)
         self._emit_tokens(rid, toks)     # tail the stream never saw
@@ -452,7 +602,11 @@ class StreamingFrontend:
         self._results[rid] = (status, toks)
         if self.tel.enabled:
             self.tel.counter("frontend.finish", status=status).inc()
-        self._emit(Finish(rid, status, toks, self._clock()))
+        t = self._clock()
+        if self.journal is not None:
+            self.journal.append("finish", rid, t, status=status,
+                                n=int(len(toks)))
+        self._emit(Finish(rid, status, toks, t))
         return status
 
     # ----------------------------------------------------------- loop --
@@ -467,6 +621,7 @@ class StreamingFrontend:
         breaker.  Returns this round's events, in emission order."""
         self._step_events = []
         self._expire_waiting()
+        self._maybe_preempt()
         self._feed()
         done = self.sched.step()
         n_served = sum(self._finish_sched(srid) == "served"
@@ -499,6 +654,56 @@ class StreamingFrontend:
             self.step()
         out, self._results = self._results, {}
         return out
+
+    # ------------------------------------------------------- recovery --
+
+    def restore(self, rid: int, request,
+                priority: Priority = Priority.INTERACTIVE, *,
+                deadline_at: Optional[float] = None,
+                generated=None) -> int:
+        """Re-install a journaled request under its *original* rid after
+        a crash (`serve.recovery.recover` drives this).  Admission
+        control is bypassed — the request was already admitted before
+        the crash, so re-rejecting it would lose accepted work.  With
+        ``generated`` (the journaled token chunks) it re-enters as a
+        `Suspended` and resumes through the ordinary prefill path;
+        `_published` starts past those tokens, so the pre-crash stream
+        is never re-emitted and exactly one `Finish` is ever published
+        per rid across the crashed and recovered frontends.  The
+        restoration is re-journaled (submit + chunk), so the recovered
+        frontend's own journal is self-contained against a second
+        crash."""
+        priority = Priority(priority)
+        assert rid not in self._reqs and rid not in self._to_sched \
+            and rid not in self._results, f"rid {rid} already live here"
+        self._next_rid = max(self._next_rid, rid + 1)
+        now = self._clock()
+        deadline = math.inf if deadline_at is None else float(deadline_at)
+        gen = np.asarray([] if generated is None else generated, np.int32)
+        item = request
+        if len(gen):
+            item = Suspended(request, gen,
+                             None if deadline == math.inf else deadline,
+                             None)
+        self._reqs[rid] = item
+        self._deadline[rid] = deadline
+        self._prio[rid] = priority
+        self._t_submit[rid] = now
+        self._published[rid] = len(gen)  # pre-crash tokens were streamed
+        if self.journal is not None:
+            self._journal_submit(rid, request, priority, deadline, now)
+            if len(gen):
+                self.journal.append("chunk", rid, now,
+                                    toks=[int(x) for x in gen])
+        if self.tel.enabled:
+            self.tel.counter("frontend.admission", verdict="restored",
+                             priority=priority.name).inc()
+            self._t_admit[rid] = now
+        heapq.heappush(self._classes[priority],
+                       (deadline, next(self._seq), rid))
+        if self.fcfg.max_queue is None:
+            self._feed()
+        return rid
 
     # ---------------------------------------------------------- async --
 

@@ -115,6 +115,7 @@ class PrefixCache:
         self.bits = bits
         self._index: dict[bytes, _Entry] = {}
         self._slot_keys: dict[int, list[bytes]] = {}
+        self._parked: dict[object, list[bytes]] = {}
         self._tick = 0
         self._cold_used = 0
         self._page_shape = None      # (n_sb, n_attn, page, n_kv, hd)
@@ -213,6 +214,31 @@ class PrefixCache:
         candidates.  Unknown slots are a no-op (staging admissions that
         abort before finishing were never pinned)."""
         for key in self._slot_keys.pop(slot, []):
+            e = self._index.get(key)
+            if e is not None:
+                e.refs -= 1
+                assert e.refs >= 0, "refcount underflow"
+        self._enforce_budgets()
+
+    def park(self, slot: int, token) -> "object | None":
+        """Transfer a slot's pins to a parked handle: the references move
+        from the slot to ``token`` without ever dropping, so a suspended
+        request's pages stay resident (never demoted — the fetch contract
+        holds) while it waits to resume.  Returns the handle, or None when
+        the slot held no pins.  The slot itself is left unpinned and free
+        to re-admit."""
+        keys = self._slot_keys.pop(slot, None)
+        if not keys:
+            return None
+        assert token not in self._parked, f"park handle {token!r} in use"
+        self._parked[token] = keys
+        return token
+
+    def unpark(self, token) -> None:
+        """Drop a parked handle's references (the resumed admission has
+        re-pinned through its own slot, or the suspension was discarded).
+        Unknown handles are a no-op, mirroring `release`."""
+        for key in self._parked.pop(token, []):
             e = self._index.get(key)
             if e is not None:
                 e.refs -= 1

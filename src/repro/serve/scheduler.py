@@ -115,6 +115,10 @@ class SchedulerConfig:
                                # pages drop instead — bit-exact, no reuse
                                # after demotion)
     kv_tier_bits: int = 8      # cold-tier codebook bits per element
+    preempt: bool = False      # allow the streaming frontend to suspend
+                               # pooled rows mid-decode (suspend/resume
+                               # preserves partial tokens; resumed greedy
+                               # output is bit-identical to uninterrupted)
 
 
 def supports_continuous_batching(cfg: ArchConfig) -> bool:
@@ -138,6 +142,14 @@ def sample_tokens(logits, temps, key):
     return jnp.where(temps <= 0.0, greedy_t, drawn)
 
 
+class SlotError(RuntimeError):
+    """Slot-pool misuse: acquiring an occupied slot, releasing a free
+    slot (double release), or releasing a slot on behalf of a request
+    that does not own it.  Preemption makes these real hazards — a
+    suspend races admission for the slot it frees — so the pool fails
+    loudly instead of silently corrupting occupancy."""
+
+
 class SlotPool:
     """Host-side bookkeeping for a fixed set of batch slots.
 
@@ -158,18 +170,48 @@ class SlotPool:
         return [i for i, r in enumerate(self.rids) if r is None]
 
     def acquire(self, slot: int, rid) -> None:
-        assert self.rids[slot] is None, f"slot {slot} already occupied"
+        if self.rids[slot] is not None:
+            raise SlotError(f"slot {slot} already occupied "
+                            f"by {self.rids[slot]!r}")
         self.rids[slot] = rid
 
-    def release(self, slot: int):
-        rid, self.rids[slot] = self.rids[slot], None
-        return rid
+    def release(self, slot: int, rid=None):
+        """Free a slot and return its occupant.  A free slot raises
+        (double release); passing ``rid`` asserts the expected occupant,
+        so a preempting caller can never free a slot that was already
+        re-admitted under a fresher request."""
+        cur = self.rids[slot]
+        if cur is None:
+            raise SlotError(f"slot {slot} released twice (already free)")
+        if rid is not None and cur != rid:
+            raise SlotError(f"slot {slot} is owned by {cur!r}, "
+                            f"not {rid!r}")
+        self.rids[slot] = None
+        return cur
 
     def occupied(self) -> list[tuple[int, object]]:
         return [(i, r) for i, r in enumerate(self.rids) if r is not None]
 
     def any_occupied(self) -> bool:
         return any(r is not None for r in self.rids)
+
+
+@dataclasses.dataclass
+class Suspended:
+    """A request evicted mid-decode with its progress preserved.
+
+    `request` is the request as originally submitted (prompt and full
+    token budget); `generated` holds every token decoded before the
+    suspension.  `submit_suspended` re-admits it through the ordinary
+    prefill path — prompt + generated prefill as one longer prompt and
+    the remaining budget decodes from there, so greedy output is
+    bit-identical to an uninterrupted run.  `parked` (when the prefix
+    cache is on) is the handle keeping the slot's pinned pages resident
+    while the request waits to resume."""
+    request: object
+    generated: np.ndarray                  # (g,) int32 tokens so far
+    deadline_at: Optional[float] = None    # absolute clock() deadline
+    parked: Optional[object] = None        # PrefixCache.park handle
 
 
 class ContinuousScheduler:
@@ -253,6 +295,14 @@ class ContinuousScheduler:
         self._staging: list[dict] = []         # chunked-prefill admissions
         self._results: dict[int, object] = {}
         self._next_rid = 0
+        # suspend/resume bookkeeping: the request as submitted (so a
+        # suspension can reconstruct the original prompt/budget), the
+        # already-generated prefix a resumed rid must prepend to every
+        # stream/Completion, and the parked prefix-pin handle to drop
+        # once the resumed rid is re-pinned at admission
+        self._req_of: dict[int, object] = {}
+        self._resume: dict[int, np.ndarray] = {}
+        self._parked_tok: dict[int, object] = {}
         self._pending: Optional[dict] = None   # in-flight chunk snapshot
         # streaming hook (serve.frontend): called between rounds with
         # (rid, tokens_so_far) for every live pooled request — overlap
@@ -423,6 +473,7 @@ class ContinuousScheduler:
         elif getattr(request, "deadline_s", None) is not None:
             assert request.deadline_s > 0, "deadline_s must be > 0"
             self._deadlines[rid] = self._clock() + request.deadline_s
+        self._req_of[rid] = request
         self._queue.append((rid, request))
         return rid
 
@@ -448,6 +499,99 @@ class ContinuousScheduler:
         `step()`'s return value; `run()` keeps its collect-everything
         semantics for batch callers."""
         return self._results.pop(rid)
+
+    # ------------------------------------------------ suspend / resume --
+
+    def suspend(self, rid: int) -> Optional[Suspended]:
+        """Evict a pooled request mid-decode, preserving its progress.
+
+        Returns None when the row has in fact already finished (its
+        Completion drains normally next round — the caller should pick
+        another victim).  Reading the pool blocks on the in-flight chunk
+        in overlap mode, so the suspension captures every token decoded
+        so far; the pending snapshot's same-occupant eligibility guard
+        then skips the released slot, exactly as it does for any slot
+        freed and re-admitted between a dispatch and its drain.  Pinned
+        prefix pages are parked (refs held) so a prompt resume can still
+        seed them; the pages are released when the resumed admission
+        re-pins, or when the suspension is discarded."""
+        slot = next((i for i, r in enumerate(self._slot_rid) if r == rid),
+                    None)
+        assert slot is not None and slot not in self._staging_slots(), \
+            f"rid {rid} is not pooled (queued/staging rows cannot suspend)"
+        buf = np.asarray(self._pool["buf"])
+        gen = np.asarray(self._pool["gen"])
+        if np.asarray(self._pool["done"])[slot]:
+            return None
+        toks = buf[slot, :gen[slot]].astype(np.int32)
+        prefix = self._resume.pop(rid, None)
+        if prefix is not None:
+            toks = np.concatenate([prefix, toks])
+        n_pre = 0 if prefix is None else len(prefix)
+        sub = self._req_of.pop(rid)
+        # undo a previous resume's prompt extension: the Suspended record
+        # always carries the *original* request plus all tokens so far
+        orig = dataclasses.replace(
+            sub,
+            tokens=np.asarray(sub.tokens, np.int32)[:len(sub.tokens) - n_pre],
+            max_new_tokens=sub.max_new_tokens + n_pre, deadline_s=None)
+        parked = None
+        if self.prefix is not None:
+            parked = self.prefix.park(slot, ("suspend", rid))
+        self._unpark(rid)                      # resumed-but-never-admitted
+        self._slots.release(slot, rid)
+        self._pool["cache_len"] = self._pool["cache_len"].at[slot].set(0)
+        deadline_at = self._deadlines.pop(rid, None)
+        if self.tel.enabled:
+            self.tel.counter("sched.evicted", reason="preempted").inc()
+        return Suspended(orig, toks, deadline_at, parked)
+
+    def submit_suspended(self, sus: Suspended, *, deadline_at=None) -> int:
+        """Re-admit a suspended request through the ordinary prefill
+        path: prompt + generated-so-far tokens prefill as one longer
+        prompt (chunked prefill and prefix-page seeding apply as for any
+        admission), the next token samples from the resumed prefill's
+        logits, and streams/Completion carry the full token sequence.
+        Greedy rows are bit-identical to an uninterrupted run: argmax
+        sampling is RNG-free and prefill is bit-identical however the
+        prompt is segmented.  Returns the new rid."""
+        req = sus.request
+        gen = np.asarray(sus.generated, np.int32)
+        remaining = req.max_new_tokens - len(gen)
+        assert remaining >= 1, \
+            "suspended request has exhausted its token budget"
+        cont = dataclasses.replace(
+            req, tokens=np.concatenate([np.asarray(req.tokens, np.int32),
+                                        gen]),
+            max_new_tokens=remaining, deadline_s=None)
+        if deadline_at is None:
+            deadline_at = sus.deadline_at
+        rid = self.submit(cont, deadline_at=deadline_at)
+        if len(gen):
+            self._resume[rid] = gen
+        if sus.parked is not None:
+            self._parked_tok[rid] = sus.parked
+        if self.tel.enabled:
+            self.tel.counter("sched.resumed").inc()
+        return rid
+
+    def discard_suspended(self, sus: Suspended) -> None:
+        """Drop a suspension that will never resume (its frontend shed
+        it): release the parked prefix pins.  The generated tokens live
+        in the Suspended record — the caller resolves the request with
+        them, so nothing is silently lost."""
+        if self.prefix is not None and sus.parked is not None:
+            self.prefix.unpark(sus.parked)
+
+    def _unpark(self, rid: int) -> None:
+        """Drop the parked pins a resumed rid carried, once its new
+        admission has pinned (or once it resolves without admitting)."""
+        tok = self._parked_tok.pop(rid, None)
+        if tok is not None and self.prefix is not None:
+            self.prefix.unpark(tok)
+
+    def _resume_prefix(self, rid) -> Optional[np.ndarray]:
+        return self._resume.get(rid)
 
     def _free_slots(self) -> list[int]:
         return self._slots.free()
@@ -549,7 +693,8 @@ class ContinuousScheduler:
                 pkeys.append(self.prefix.lookup(req.tokens)[0])
         return {"bucket": head_bucket, "tokens": tokens, "lengths": lengths,
                 "slots": slots, "eos": eos, "max_new": max_new,
-                "temps": temps, "pkeys": pkeys}
+                "temps": temps, "pkeys": pkeys,
+                "rids": [rid for rid, _ in take]}
 
     def _plan_prefix_group(self, lead_req, free: list[int],
                            n_hit: int) -> Optional[dict]:
@@ -617,6 +762,8 @@ class ContinuousScheduler:
                 if keys:
                     self.prefix.pin(int(slot), keys,
                                     rows["k"][:, :, i], rows["v"][:, :, i])
+        for rid in g["rids"]:          # after pin: parked pages stay hot
+            self._unpark(rid)          # until the new pins hold them
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
             self._pool, jnp.asarray(g["slots"]), rows, logits0,
@@ -685,10 +832,11 @@ class ContinuousScheduler:
             self.tel.note_compiles("sched.prefill_chunk", self._prefill_chunk,
                                    shape=f"bucket{g['bucket']}")
             self.tel.counter("sched.admitted", path="prefix").inc(len(take))
-        for i, ((_, _, keys), slot) in enumerate(zip(take, g["slots"])):
+        for i, ((rid, _, keys), slot) in enumerate(zip(take, g["slots"])):
             self.prefix.record(len(keys), H)
             self.prefix.pin(int(slot), keys, cache["k"][:, :, i],
                             cache["v"][:, :, i])
+            self._unpark(rid)          # resumed rows: new pins now hold
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
             self._pool, jnp.asarray(slots), cache, logits0,
@@ -767,6 +915,7 @@ class ContinuousScheduler:
         if self.prefix is not None and st["keys"]:
             self.prefix.pin(st["slot"], st["keys"],
                             st["cache"]["k"][:, :, 0], st["cache"]["v"][:, :, 0])
+        self._unpark(st["rid"])        # resumed rows: new pins now hold
         self._key, sub = jax.random.split(self._key)
         self._pool = self._inject(
             self._pool, jnp.asarray([st["slot"]]), st["cache"],
@@ -798,9 +947,14 @@ class ContinuousScheduler:
             if self.prefix is not None:
                 self.prefix.release(i)     # unpin the slot's prefix pages
             self._deadlines.pop(rid, None)
-            self._results[rid] = Completion(
-                buf[i, :gen[i]].astype(np.int32), int(gen[i]),
-                timed_out=timed_out)
+            self._req_of.pop(rid, None)
+            self._unpark(rid)
+            toks = buf[i, :gen[i]].astype(np.int32)
+            prefix = self._resume.pop(rid, None)
+            if prefix is not None:         # resumed rows report the full
+                toks = np.concatenate([prefix, toks])      # token stream
+            self._results[rid] = Completion(toks, len(toks),
+                                            timed_out=timed_out)
             out.append(rid)
         self._pool["cache_len"] = (
             self._pool["cache_len"].at[jnp.asarray(fin)].set(0))
@@ -827,9 +981,16 @@ class ContinuousScheduler:
         keep = deque()
         for rid, req in self._queue:
             if rid in expired:
-                self._results[rid] = Completion(
-                    np.zeros((0,), np.int32), 0, timed_out=True)
+                # a resumed request expiring in queue still resolves with
+                # the tokens it generated before suspension — preemption
+                # never silently drops work
+                pre = self._resume.pop(rid, None)
+                toks = pre if pre is not None else np.zeros((0,), np.int32)
+                self._results[rid] = Completion(toks, len(toks),
+                                                timed_out=True)
                 self._deadlines.pop(rid)
+                self._req_of.pop(rid, None)
+                self._unpark(rid)
                 out.append(rid)
             else:
                 keep.append((rid, req))
@@ -837,10 +998,14 @@ class ContinuousScheduler:
         # staging: abort the chunked prefill, free its claimed slot
         for st in [s for s in self._staging if s["rid"] in expired]:
             self._staging.remove(st)
-            self._slots.release(st["slot"])
+            self._slots.release(st["slot"], st["rid"])
             self._deadlines.pop(st["rid"])
-            self._results[st["rid"]] = Completion(
-                np.zeros((0,), np.int32), 0, timed_out=True)
+            self._req_of.pop(st["rid"], None)
+            self._unpark(st["rid"])
+            pre = self._resume.pop(st["rid"], None)
+            toks = pre if pre is not None else np.zeros((0,), np.int32)
+            self._results[st["rid"]] = Completion(toks, len(toks),
+                                                  timed_out=True)
             out.append(st["rid"])
         # pooled: evict with partial tokens (host copy like _drain's)
         fin = [i for i, rid in enumerate(self._slot_rid)
@@ -876,7 +1041,11 @@ class ContinuousScheduler:
             return
         buf, gen = np.asarray(buf), np.asarray(gen)
         for i in rows:
-            self.stream_cb(rids[i], buf[i, :gen[i]])
+            toks = buf[i, :gen[i]]
+            pre = self._resume.get(rids[i])
+            if pre is not None:            # resumed rows stream the full
+                toks = np.concatenate([pre, toks])         # token stream
+            self.stream_cb(rids[i], toks)
 
     def _snapshot_chunk(self, rids: list, active: np.ndarray) -> None:
         """Capture the just-dispatched chunk's observable state and start
@@ -946,6 +1115,14 @@ class ContinuousScheduler:
         another prefill segment or decode chunk past its budget."""
         self._round += 1                # 0-based round index while inside:
                                         # _dispatch_chunk sees _round - 1
+        if self.faults is not None and self.faults.crashed(self._round - 1):
+            # scripted engine death: the pool and every in-flight chunk
+            # are lost mid-round.  serve.recovery replays the journal
+            # into a fresh stack and regenerates the lost tokens
+            # bit-identically
+            from repro.serve.faults import EngineCrashError
+            raise EngineCrashError(
+                f"scripted engine crash at round {self._round - 1}")
         with self._span("round"):
             expired = self._expire_deadlines()
             if self.sched.overlap:

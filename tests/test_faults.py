@@ -52,7 +52,7 @@ from repro.serve.gateway import (
     mixed_fleet,
 )
 from repro.serve.gateway.channel import RETRY_SAFETY_CAP
-from repro.serve.scheduler import SlotPool
+from repro.serve.scheduler import SlotError, SlotPool
 
 KEY = jax.random.PRNGKey(9)
 CFG = AgileNNConfig(image_size=16, remote_width=16, remote_blocks=2,
@@ -448,18 +448,35 @@ def test_device_and_gateway_stalls_stretch_latency():
 # ------------------------------------------------- slot pool churn -------
 
 def test_slot_pool_churn_never_leaks_or_double_assigns():
-    """Satellite: randomized acquire/release churn preserves the pool
-    invariants — free() and occupied() partition the slots, double
-    acquire asserts, release returns the occupant exactly once."""
+    """Satellite: randomized acquire/release/preempt/resume churn
+    preserves the pool invariants — free() and occupied() partition the
+    slots, double acquire and double/foreign release raise SlotError,
+    release returns the occupant exactly once, and a preempted rid can
+    resume on any free slot (not necessarily the one it vacated)."""
     rng = np.random.RandomState(0)
     pool = SlotPool(6)
     live = {}
+    suspended = []
     next_rid = 0
     for _ in range(500):
-        if live and (len(pool.free()) == 0 or rng.randint(2)):
+        choice = rng.randint(4)
+        if live and (len(pool.free()) == 0 or choice == 0):
+            # plain drain: release without owner check
             slot = int(rng.choice(sorted(live)))
             assert pool.release(slot) == live.pop(slot)
-        else:
+        elif live and choice == 1:
+            # preempt: owner-checked release parks the rid off-pool
+            slot = int(rng.choice(sorted(live)))
+            rid = live.pop(slot)
+            assert pool.release(slot, rid) == rid
+            suspended.append(rid)
+        elif suspended and pool.free() and choice == 2:
+            # resume: the suspended rid re-admits on any free slot
+            rid = suspended.pop(int(rng.randint(len(suspended))))
+            slot = int(rng.choice(pool.free()))
+            pool.acquire(slot, rid)
+            live[slot] = rid
+        elif pool.free():
             slot = int(rng.choice(pool.free()))
             pool.acquire(slot, next_rid)
             live[slot] = next_rid
@@ -474,8 +491,16 @@ def test_slot_pool_churn_never_leaks_or_double_assigns():
         live.pop(slot0)
     slot = pool.free()[0]
     pool.acquire(slot, next_rid)
-    with pytest.raises(AssertionError, match="already occupied"):
+    with pytest.raises(SlotError, match="already occupied"):
         pool.acquire(slot, next_rid + 1)
+    # foreign-owner release is rejected without freeing the slot ...
+    with pytest.raises(SlotError, match="owned by"):
+        pool.release(slot, next_rid + 1)
+    assert pool.rids[slot] == next_rid
+    # ... and releasing a free slot twice is a typed error, not a no-op
+    assert pool.release(slot, next_rid) == next_rid
+    with pytest.raises(SlotError, match="released twice"):
+        pool.release(slot)
 
 
 def test_gateway_pool_returns_to_empty_after_chaos():

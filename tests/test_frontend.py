@@ -401,6 +401,11 @@ async def _collect(aiter):
     ["--arch", "qwen2-0.5b", "--queue", "4", "--max-queue", "2"],
     ["--arch", "qwen2-0.5b", "--queue", "4", "--priority", "batch"],
     ["--arch", "qwen2-0.5b", "--queue", "4", "--slo-ms", "40"],
+    ["--arch", "qwen2-0.5b", "--preempt"],
+    ["--arch", "qwen2-0.5b", "--queue", "4", "--preempt"],
+    ["--arch", "qwen2-0.5b", "--journal", "j.jsonl"],
+    ["--arch", "qwen2-0.5b", "--queue", "4", "--journal", "j.jsonl"],
+    ["--gateway", "4", "--preempt"],
     ["--faults", "stampede"],
     ["--arch", "qwen2-0.5b", "--deadline-ms", "100"],
     ["--gateway", "4", "--queue", "4"],

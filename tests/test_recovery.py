@@ -1,0 +1,417 @@
+"""Preemptible serving + crash-consistent journal invariants.
+
+The contract under test, strongest first:
+
+  * suspend/resume is *exact*: a request evicted mid-decode and
+    re-admitted through the chunked-prefill path produces greedy tokens
+    bit-identical to an uninterrupted run — including when suspended
+    twice;
+  * priority preemption frees a slot for an aged INTERACTIVE waiter by
+    suspending the worst pooled row; the victim re-enters its class
+    queue (never dropped) and everything still completes bit-identically
+    while interactive TTFT improves;
+  * an attached journal is a bit-identical pass-through (events and
+    tokens unchanged) and its records reassemble every token stream;
+  * crash + replay is exact and exactly-once: for a crash injected at
+    *every* scheduling round, recovery reconstructs the journal into a
+    fresh frontend and the union of pre-crash and replayed finishes
+    covers each request once with bit-identical tokens — including when
+    the crash tears the journal's final line;
+  * the launcher rejects --preempt / --journal outside --stream at parse
+    time, and the whole preempt+crash+recover path honours the
+    telemetry zero-overhead contract (disabled observation never changes
+    tokens; enabled observation sees the new counters and spans).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import backbone as bb
+from repro.serve.engine import Request
+from repro.serve.faults import EngineCrash, EngineCrashError, FaultInjector
+from repro.serve.frontend import (
+    Finish,
+    FirstToken,
+    FrontendConfig,
+    Priority,
+    StreamingFrontend,
+    Suspended,
+    VirtualClock,
+)
+from repro.serve.recovery import (
+    RequestJournal,
+    recover,
+    recovery_plan,
+)
+from repro.serve.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.serve.telemetry import Telemetry
+
+KEY = jax.random.PRNGKey(0)
+SCHED = dict(buckets=(8, 16), max_slots=2, prefill_group=1, chunk=2)
+
+
+@pytest.fixture(scope="module")
+def system():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = bb.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=5):
+    rng = np.random.RandomState(seed)
+    return [Request(tokens=rng.randint(0, cfg.vocab,
+                                       int(rng.choice((4, 8, 12)))),
+                    max_new_tokens=max_new)
+            for _ in range(n)]
+
+
+def _sched(cfg, params, *, faults=None, **kw):
+    skw = dict(SCHED)
+    skw.update(kw)
+    return ContinuousScheduler(cfg, params, sched=SchedulerConfig(**skw),
+                               max_len=48, seed=0, faults=faults)
+
+
+def _frontend(cfg, params, *, frontend=None, clock=None, faults=None,
+              telemetry=None, journal=None, **sched_kw):
+    kw = dict(SCHED)
+    kw.update(sched_kw)
+    return StreamingFrontend(cfg, params, frontend=frontend,
+                             sched=SchedulerConfig(**kw), max_len=48,
+                             seed=0, clock=clock, faults=faults,
+                             telemetry=telemetry, journal=journal)
+
+
+# --------------------------------------------------- suspend / resume --
+
+
+def test_suspend_resume_tokens_bit_identical(system):
+    """A request evicted mid-decode and re-admitted (prompt + generated
+    tokens through the ordinary prefill path) finishes with greedy
+    tokens bit-identical to never having been suspended."""
+    cfg, params = system
+    reqs = _requests(cfg, 3, max_new=8)
+    ref = _sched(cfg, params)
+    rids = [ref.submit(r) for r in reqs]
+    refout = ref.run()
+    want = {i: np.asarray(refout[rid].tokens)
+            for i, rid in enumerate(rids)}
+
+    sched = _sched(cfg, params)
+    rids = [sched.submit(r) for r in reqs]
+    done = set()
+    for _ in range(3):                     # decode a few partial chunks
+        done.update(sched.step())
+    sus = sched.suspend(rids[0])
+    assert sus is not None and rids[0] not in sched._slot_rid
+    n_pre = len(sus.generated)
+    assert 0 < n_pre < 8                   # genuinely mid-decode
+    for _ in range(2):                     # victim's slot serves others
+        done.update(sched.step())
+    new_rid = sched.submit_suspended(sus)
+    while sched.has_work():
+        done.update(sched.step())
+    outs = {r: sched.pop_completion(r) for r in done}
+    np.testing.assert_array_equal(outs[new_rid].tokens, want[0])
+    assert outs[new_rid].steps == len(want[0])
+    for i in (1, 2):
+        np.testing.assert_array_equal(outs[rids[i]].tokens, want[i])
+
+
+def test_double_suspend_still_bit_identical(system):
+    """Suspension chains: a resumed request preempted a second time
+    still finishes bit-identically (the resume prefix accumulates)."""
+    cfg, params = system
+    req = _requests(cfg, 1, max_new=12)[0]
+    ref = _sched(cfg, params)
+    rid = ref.submit(req)
+    want = np.asarray(ref.run()[rid].tokens)
+
+    sched = _sched(cfg, params)
+    rid = sched.submit(req)
+    for _ in range(2):
+        sched.step()
+    sus = sched.suspend(rid)
+    assert sus is not None
+    n_first = len(sus.generated)
+    assert 0 < n_first < 12
+    rid = sched.submit_suspended(sus)
+    sched.step()
+    sus = sched.suspend(rid)
+    assert sus is not None
+    assert len(sus.generated) > n_first    # the prefix accumulated
+    rid = sched.submit_suspended(sus)
+    outs = sched.run()
+    np.testing.assert_array_equal(np.asarray(outs[rid].tokens), want)
+
+
+def _drive(fe, clock, round_s=0.01):
+    while fe.has_work():
+        clock.now += round_s
+        fe.step()
+    out, fe._results = fe._results, {}
+    return out
+
+
+def test_preemption_suspends_worst_row_for_interactive(system):
+    """With SchedulerConfig.preempt, an INTERACTIVE arrival facing a
+    full pool suspends the lowest-priority pooled row: the victim lands
+    back in its class queue as a Suspended, the interactive request's
+    first token arrives earlier than without preemption, and every
+    request (victim included) still serves bit-identical tokens."""
+    cfg, params = system
+    hogs = _requests(cfg, 2, seed=1, max_new=10)
+    inter = _requests(cfg, 1, seed=2, max_new=4)[0]
+    ref = _sched(cfg, params)
+    rids = [ref.submit(r) for r in hogs + [inter]]
+    refout = ref.run()
+    want = [np.asarray(refout[r].tokens) for r in rids]
+
+    def run(preempt):
+        clock = VirtualClock()
+        fe = _frontend(cfg, params, clock=clock, preempt=preempt,
+                       frontend=FrontendConfig(max_queue=8, feed_depth=1,
+                                               preempt_wait_ms=0.0))
+        fids = [fe.submit(h, Priority.BEST_EFFORT) for h in hogs]
+        # let both hogs reach the pool before the interactive arrival
+        while fe.sched._free_slots() and fe.has_work():
+            clock.now += 0.01
+            fe.step()
+        saw_suspend = False
+        fids.append(fe.submit(inter, Priority.INTERACTIVE))
+        while fe.has_work():
+            clock.now += 0.01
+            fe.step()
+            saw_suspend |= any(isinstance(r, Suspended)
+                               for r in fe._reqs.values())
+        out, fe._results = fe._results, {}
+        ttft = {ev.rid: ev.t for ev in fe.events
+                if isinstance(ev, FirstToken)}
+        return fids, out, ttft, saw_suspend
+
+    fids_p, out_p, ttft_p, suspended = run(True)
+    fids_n, out_n, ttft_n, _ = run(False)
+    assert suspended, "preemption never suspended a pooled row"
+    for fids, out in ((fids_p, out_p), (fids_n, out_n)):
+        for i, fid in enumerate(fids):
+            status, toks = out[fid]
+            assert status == "served"
+            np.testing.assert_array_equal(toks, want[i])
+    # the preempted run starts the interactive stream strictly earlier
+    assert ttft_p[fids_p[2]] < ttft_n[fids_n[2]]
+
+
+# -------------------------------------------------- journal: attached --
+
+
+def _ev_key(ev):
+    toks = (tuple(int(x) for x in ev.tokens)
+            if isinstance(ev, Finish) else None)
+    status = ev.status if isinstance(ev, Finish) else None
+    tok = getattr(ev, "token", None)
+    return (type(ev).__name__, ev.rid, tok, status, toks, ev.t)
+
+
+def test_journal_is_bit_identical_passthrough(system):
+    """Attaching a journal changes nothing observable: events (types,
+    rids, tokens, timestamps) and results are bit-identical to the
+    journal-less run, and the journal's chunk records reassemble every
+    served stream exactly."""
+    cfg, params = system
+    reqs = _requests(cfg, 6)
+    plain = _frontend(cfg, params, clock=VirtualClock())
+    fids = [plain.submit(r) for r in reqs]
+    want = plain.run()
+
+    j = RequestJournal()
+    fe = _frontend(cfg, params, clock=VirtualClock(), journal=j)
+    fids2 = [fe.submit(r) for r in reqs]
+    got = fe.run()
+    assert fids2 == fids
+    assert [_ev_key(e) for e in fe.events] == \
+        [_ev_key(e) for e in plain.events]
+    for fid in fids:
+        assert want[fid][0] == got[fid][0]
+        np.testing.assert_array_equal(want[fid][1], got[fid][1])
+    # well-formed: per-rid lifecycle order and exact token reassembly
+    by_rid = {}
+    for rec in j.events:
+        by_rid.setdefault(rec["rid"], []).append(rec)
+    assert set(by_rid) == set(fids)
+    for fid in fids:
+        kinds = [r["ev"] for r in by_rid[fid]]
+        assert kinds[0] == "submit" and kinds[1] == "admit" \
+            and kinds[-1] == "finish"
+        assert all(k == "chunk" for k in kinds[2:-1])
+        toks = [t for r in by_rid[fid] if r["ev"] == "chunk"
+                for t in r["toks"]]
+        np.testing.assert_array_equal(np.asarray(toks, np.int32),
+                                      got[fid][1])
+        assert by_rid[fid][-1]["n"] == len(toks)
+        ts = [r["t"] for r in by_rid[fid]]
+        assert ts == sorted(ts)
+
+
+# ---------------------------------------------------- crash + replay --
+
+
+def _run_reference(cfg, params, reqs, prios):
+    clock = VirtualClock()
+    fe = _frontend(cfg, params, clock=clock)
+    fids = [fe.submit(r, p) for r, p in zip(reqs, prios)]
+    out = _drive(fe, clock)
+    return fids, out, fe.sched._round
+
+
+def test_crash_replay_bit_identical_at_every_round(system):
+    """Sweep EngineCrash across every scheduling round of a pinned
+    workload: recovery replays the journal into a fresh frontend and the
+    merged results cover each admitted request exactly once with tokens
+    bit-identical to the crash-free run (exactly-once Finish: the
+    pre-crash and recovered finish sets never overlap)."""
+    cfg, params = system
+    reqs = _requests(cfg, 4, max_new=4)
+    prios = [Priority.INTERACTIVE, Priority.BATCH,
+             Priority.BEST_EFFORT, Priority.INTERACTIVE]
+    fids, want, n_rounds = _run_reference(cfg, params, reqs, prios)
+    assert n_rounds >= 4                   # the sweep is non-trivial
+    for r in range(n_rounds):
+        j = RequestJournal()
+        clock = VirtualClock()
+        fe = _frontend(cfg, params, clock=clock, journal=j,
+                       faults=FaultInjector((EngineCrash(r),)))
+        got_fids = [fe.submit(q, p) for q, p in zip(reqs, prios)]
+        assert got_fids == fids
+        with pytest.raises(EngineCrashError):
+            _drive(fe, clock)
+        pre = {ev.rid for ev in fe.events if isinstance(ev, Finish)}
+
+        clock2 = VirtualClock(clock.now)
+        fe2 = _frontend(cfg, params, clock=clock2)
+        merged = recover(fe2, j, drive=lambda: _drive(fe2, clock2))
+        post = {ev.rid for ev in fe2.events if isinstance(ev, Finish)}
+        assert not pre & post, f"round {r}: duplicate Finish delivery"
+        assert set(merged) == set(fids), f"round {r}: lost requests"
+        for fid in fids:
+            status, toks = merged[fid]
+            assert status == "served"
+            np.testing.assert_array_equal(
+                toks, want[fid][1],
+                err_msg=f"crash at round {r}: rid {fid} diverged")
+
+
+def test_torn_final_journal_line_is_dropped_and_recovered(tmp_path, system):
+    """A torn final line (the partial write a real crash leaves) fails
+    its crc and is dropped; the request that lost only its finish record
+    resolves from its journaled chunks — logically complete — with
+    bit-identical tokens and nothing replayed."""
+    cfg, params = system
+    path = str(tmp_path / "journal.jsonl")
+    reqs = _requests(cfg, 3, max_new=4)
+    clock = VirtualClock()
+    with RequestJournal(path) as j:
+        fe = _frontend(cfg, params, clock=clock, journal=j)
+        fids = [fe.submit(q) for q in reqs]
+        want = _drive(fe, clock)
+    whole = RequestJournal.read(path)
+    assert [
+        (r["ev"], r["rid"]) for r in whole
+    ] == [(r["ev"], r["rid"]) for r in j.events]
+    assert whole[-1]["ev"] == "finish"
+
+    with open(path, "rb") as f:
+        raw = f.read()
+    with open(path, "wb") as f:
+        f.write(raw[:-4])                  # tear the last record
+    events = RequestJournal.read(path)
+    assert len(events) == len(whole) - 1   # only the torn line is lost
+
+    plan = recovery_plan(events)
+    assert not plan.replay                 # finish was all the crash ate
+    fe2 = _frontend(cfg, params, clock=VirtualClock())
+    merged = recover(fe2, events)
+    assert set(merged) == set(fids)
+    for fid in fids:
+        status, toks = merged[fid]
+        assert status == "served"
+        np.testing.assert_array_equal(toks, want[fid][1])
+
+
+def test_recovery_replays_never_admitted_submissions(system):
+    """A crash at round 0 leaves some requests journaled as submitted
+    but never admitted to the pool; recovery replays them from their
+    prompts alone."""
+    cfg, params = system
+    reqs = _requests(cfg, 4, max_new=4)
+    fids, want, _ = _run_reference(cfg, params, reqs,
+                                   [Priority.INTERACTIVE] * 4)
+    j = RequestJournal()
+    clock = VirtualClock()
+    fe = _frontend(cfg, params, clock=clock, journal=j,
+                   faults=FaultInjector((EngineCrash(0),)))
+    for q in reqs:
+        fe.submit(q)
+    with pytest.raises(EngineCrashError):
+        _drive(fe, clock)
+    plan = recovery_plan(j.events)
+    assert {it.rid for it in plan.replay} == set(fids)
+    assert all(len(it.generated) == 0 for it in plan.replay)
+    clock2 = VirtualClock()
+    fe2 = _frontend(cfg, params, clock=clock2)
+    merged = recover(fe2, j, drive=lambda: _drive(fe2, clock2))
+    for fid in fids:
+        np.testing.assert_array_equal(merged[fid][1], want[fid][1])
+
+
+# ------------------------------------------------- telemetry contract --
+
+
+def _chaos_run(cfg, params, telemetry=None):
+    """Preempt + crash + recover under one telemetry posture; returns
+    the merged results (rid -> (status, tokens))."""
+    hogs = _requests(cfg, 2, seed=1, max_new=8)
+    inter = _requests(cfg, 1, seed=2, max_new=4)[0]
+    j = RequestJournal(telemetry=telemetry)
+    clock = VirtualClock()
+    fe = _frontend(cfg, params, clock=clock, journal=j,
+                   telemetry=telemetry, preempt=True,
+                   faults=FaultInjector((EngineCrash(6),)),
+                   frontend=FrontendConfig(max_queue=8, feed_depth=1,
+                                           preempt_wait_ms=0.0))
+    for h in hogs:
+        fe.submit(h, Priority.BEST_EFFORT)
+    while fe.sched._free_slots() and fe.has_work():
+        clock.now += 0.01
+        fe.step()
+    fe.submit(inter, Priority.INTERACTIVE)
+    with pytest.raises(EngineCrashError):
+        _drive(fe, clock)
+    clock2 = VirtualClock(clock.now)
+    fe2 = _frontend(cfg, params, clock=clock2, telemetry=telemetry)
+    return recover(fe2, j, drive=lambda: _drive(fe2, clock2))
+
+
+def test_chaos_path_honours_telemetry_zero_overhead_contract(system):
+    """The whole preempt+journal+crash+recover path is observation-only:
+    tokens are bit-identical across the module default, an explicitly
+    disabled Telemetry, and a fully enabled one — and the enabled run
+    records the new counters and the recovery span."""
+    cfg, params = system
+    base = _chaos_run(cfg, params)
+    off = _chaos_run(cfg, params, Telemetry(enabled=False))
+    on = Telemetry(enabled=True)
+    seen = _chaos_run(cfg, params, on)
+    assert set(base) == set(off) == set(seen)
+    for rid in base:
+        assert base[rid][0] == off[rid][0] == seen[rid][0]
+        np.testing.assert_array_equal(base[rid][1], off[rid][1])
+        np.testing.assert_array_equal(base[rid][1], seen[rid][1])
+    assert on.counter("frontend.preempted",
+                      victim=Priority.BEST_EFFORT.name).n >= 1
+    assert on.counter("sched.resumed").n >= 1
+    assert on.counter("journal.events", ev="submit").n >= 3
+    assert on.counter("recovery.replayed").n >= 1
+    assert any(s.name == "recovery.replay" for s in on.trace.spans)
